@@ -1,0 +1,27 @@
+"""Shared benchmark plumbing."""
+
+from __future__ import annotations
+
+import time
+
+from repro import configs
+from repro.core import (BASELINES, CostModel, SearchOptions, find_strategy,
+                        multi_pod_mesh_spec, single_pod_mesh_spec)
+from repro.models.arch import SHAPES
+from repro.models.graph_export import export_graph
+
+BENCH_ARCHS = ["llama3_2_1b", "qwen2_5_3b", "olmoe_1b_7b", "phi3_5_moe_42b",
+               "rwkv6_1b6", "jamba_1_5_large", "internvl2_76b",
+               "seamless_m4t_v2"]
+
+
+def cell(arch_name: str, shape_name: str):
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    return arch, shape, export_graph(arch, shape)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, time.perf_counter() - t0

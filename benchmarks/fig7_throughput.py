@@ -1,0 +1,85 @@
+"""Paper Figure 7: training throughput per parallelization strategy.
+
+The paper measures images/s on 1-16 GPUs.  Our analogue: cost-model
+projected tokens/s for each strategy (data / model / OWT / layer-wise) per
+architecture, on growing TPU slices (16 -> 512 chips), plus the linear-
+scaling ideal.  Speedup ratios are the comparable quantity (the paper's
+1.4-2.2x over the best baseline).
+"""
+
+from __future__ import annotations
+
+from repro.core import (BASELINES, CostModel, MeshSpec, AxisSpec, ICI_BW,
+                        POD_BW, find_strategy)
+from repro.models.arch import SHAPES
+
+from .common import BENCH_ARCHS, cell
+
+MESHES = {
+    "16": MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                         AxisSpec("model", 4, ICI_BW))),
+    "64": MeshSpec(axes=(AxisSpec("data", 8, ICI_BW),
+                         AxisSpec("model", 8, ICI_BW))),
+    "256": MeshSpec(axes=(AxisSpec("data", 16, ICI_BW),
+                          AxisSpec("model", 16, ICI_BW))),
+    "512": MeshSpec(axes=(AxisSpec("pod", 2, POD_BW),
+                          AxisSpec("data", 16, ICI_BW),
+                          AxisSpec("model", 16, ICI_BW))),
+}
+
+
+def _with_fsdp(strategy, graph, mesh):
+    from repro.core import Strategy
+    return Strategy({
+        n: (c.with_fsdp() if graph.nodes[n].param_bytes > 1e6
+            and c.replicating_axes(mesh) else c)
+        for n, c in strategy.assignment.items()})
+
+
+def run(print_fn=print, archs=None) -> list[dict]:
+    from repro.core.cost_model import strategy_device_bytes
+
+    budget = 16 * 1024**3 * 0.85
+    rows = []
+    for arch_name in (archs or BENCH_ARCHS):
+        arch, shape, graph = cell(arch_name, "train_4k")
+        tokens = shape.tokens
+        for mesh_name, mesh in MESHES.items():
+            cm = CostModel(mesh, training=True)
+            per = {}
+            feas = {}
+            # baselines upgrade to their ZeRO-3 variant when they OOM —
+            # the honest modern uniform baseline
+            for bname, fn in BASELINES.items():
+                strat = fn(graph, mesh)
+                mem = strategy_device_bytes(graph, strat, mesh, True)
+                if mem > budget:
+                    strat = _with_fsdp(strat, graph, mesh)
+                    mem = strategy_device_bytes(graph, strat, mesh, True)
+                    bname = bname  # still reported under the same key
+                per[bname] = tokens / cm.total_time(graph, strat)
+                feas[bname] = mem <= budget
+            s = find_strategy(graph, mesh, training=True)
+            per["layerwise"] = tokens / s.cost
+            feas["layerwise"] = s.meta.get(
+                "device_bytes",
+                strategy_device_bytes(graph, s, mesh, True)) <= budget
+            feasible = [per[b] for b in BASELINES if feas[b]]
+            row = {"arch": arch_name, "chips": mesh_name, **per,
+                   "feasible": feas}
+            if feasible and feas["layerwise"]:
+                row["speedup_vs_best_feasible_baseline"] = (
+                    per["layerwise"] / max(feasible))
+                tag = f"speedup={row['speedup_vs_best_feasible_baseline']:.2f}x"
+            else:
+                row["speedup_vs_best_feasible_baseline"] = None
+                tag = "speedup=OOM(cell infeasible at this scale)"
+            rows.append(row)
+            print_fn(f"fig7,{arch_name},{mesh_name}chips," +
+                     ",".join(f"{k}={v:.3e}{'' if feas[k] else '(OOM)'}"
+                              for k, v in per.items()) + "," + tag)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,36 @@
+"""Paper Figure 8: per-step communication cost (bytes moved) per strategy.
+
+The paper reports data transferred per step for data/model/OWT/layer-wise;
+ours is per-chip bytes from the same collective formulas the cost model
+prices (sync = gradient reduction, xfer = inter-layer re-layout, internal =
+layer-internal collectives)."""
+
+from __future__ import annotations
+
+from repro.core import BASELINES, CostModel, find_strategy, single_pod_mesh_spec
+
+from .common import BENCH_ARCHS, cell
+
+
+def run(print_fn=print, archs=None) -> list[dict]:
+    mesh = single_pod_mesh_spec()
+    rows = []
+    for arch_name in (archs or BENCH_ARCHS):
+        arch, shape, graph = cell(arch_name, "train_4k")
+        cm = CostModel(mesh, training=True)
+        per = {}
+        for bname, fn in BASELINES.items():
+            per[bname] = cm.comm_bytes(graph, fn(graph, mesh))["total"]
+        s = find_strategy(graph, mesh, training=True)
+        per["layerwise"] = cm.comm_bytes(graph, s)["total"]
+        best = min(per[b] for b in BASELINES)
+        rows.append({"arch": arch_name, **per,
+                     "reduction_vs_best_baseline": best / per["layerwise"]})
+        print_fn(f"fig8,{arch_name}," +
+                 ",".join(f"{k}={v/1e9:.3f}GB" for k, v in per.items()) +
+                 f",reduction={best/max(per['layerwise'],1e-9):.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

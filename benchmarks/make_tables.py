@@ -1,0 +1,92 @@
+"""Generate the EXPERIMENTS.md §Roofline markdown table and §Perf log from
+results/dryrun/*.json + results/perf_log.jsonl.
+
+    PYTHONPATH=src:. python -m benchmarks.make_tables > /tmp/tables.md
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro import configs
+from repro.models.arch import SHAPES
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    """6*N_active*D (+ causal attention FLOPs, which 6*N*D ignores and which
+    dominate at 32k+ context)."""
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    n_active = arch.active_param_count()
+    n_attn = sum(1 for l in arch.pattern if l.mixer == "attn") \
+        * arch.n_units + arch.enc_layers + (arch.n_layers if arch.enc_layers
+                                            else 0)
+    hd = arch.hd
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        attn = 3 * 2.0 * B * arch.n_heads * S * S * hd / 2 * n_attn
+        return 6.0 * n_active * shape.tokens + attn
+    if shape.kind == "prefill":
+        attn = 2.0 * B * arch.n_heads * S * S * hd / 2 * n_attn
+        return 2.0 * n_active * shape.tokens + attn
+    attn = 4.0 * B * arch.n_heads * S * hd * n_attn
+    return 2.0 * n_active * shape.global_batch + attn
+
+
+def roofline_table(mesh: str = "single") -> str:
+    rows = []
+    for f in sorted((RESULTS / "dryrun").glob(f"*__{mesh}__search.json")):
+        d = json.loads(f.read_text())
+        name = f"{d.get('arch','?')} / {d.get('shape','?')}"
+        if d.get("status") == "skipped":
+            rows.append(f"| {name} | — | — | — | — | skipped (full-attention "
+                        f"long_500k) | — | — |")
+            continue
+        rf = d["roofline"]
+        mf = model_flops(d["arch"], d["shape"]) / d["n_chips"]
+        useful = mf / max(d["hlo_flops_per_device"], 1e-9)
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = (mf / 197e12) / max(step, 1e-12)
+        mem = d["hbm"]["per_device_total"] / 2**30
+        fits = "yes" if d["hbm"]["fits_16GiB"] else "NO"
+        rows.append(
+            f"| {name} | {rf['compute_s']*1e3:.1f} | {rf['memory_s']*1e3:.1f}"
+            f" | {rf['collective_s']*1e3:.1f} | **{rf['dominant']}** |"
+            f" {useful:.2f} | {frac:.3f} | {mem:.1f} ({fits}) |")
+    head = ("| arch / shape | compute (ms) | memory (ms) | collective (ms) |"
+            " dominant | useful-FLOPs ratio | roofline fraction |"
+            " HBM GiB (fits) |\n|---|---|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def perf_log() -> str:
+    path = RESULTS / "perf_log.jsonl"
+    if not path.exists():
+        return "(no perf iterations recorded yet)"
+    out = []
+    for line in path.read_text().splitlines():
+        e = json.loads(line)
+        b, r = e.get("baseline"), e.get("result")
+        if not r:
+            continue
+        out.append(f"**{e['cell']} / {e['variant']}** — {e['hypothesis']}")
+        if b:
+            for k in ("compute_s", "memory_s", "collective_s"):
+                out.append(f"  - {k}: {b[k]*1e3:.1f} -> {r[k]*1e3:.1f} ms "
+                           f"({(r[k]/max(b[k],1e-12)-1)*100:+.0f}%)")
+            out.append(f"  - HBM: {e.get('baseline_mem_GiB', 0):.1f} -> "
+                       f"{e.get('mem_GiB', 0):.1f} GiB")
+        out.append("")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print("## Roofline (single pod, searched strategy)\n")
+    print(roofline_table("single"))
+    print("\n## Roofline (multi pod)\n")
+    print(roofline_table("multi"))
+    print("\n## Perf iterations\n")
+    print(perf_log())

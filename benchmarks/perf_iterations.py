@@ -1,0 +1,102 @@
+"""§Perf hillclimbing driver: compile a cell VARIANT and report the
+roofline-term deltas against the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.perf_iterations \
+        --cell llama3_2_1b/train_4k/single --variant remat_dots \
+        --hypothesis "dots policy cuts recompute flops ~25%"
+
+Variants are registered below; each returns (TrainConfig, plan_override,
+tag).  Results land in results/dryrun/<cell>__<tag>.json and a log line is
+appended to results/perf_log.jsonl for EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+from pathlib import Path
+
+from repro.launch.dryrun import RESULTS, dryrun_cell
+from repro.train import TrainConfig
+
+
+def _cfg(**kw):
+    def make(arch):
+        mb = kw.pop("microbatches", None)
+        if mb is None:
+            mb = 1 if arch.d_model <= 2048 else (
+                4 if arch.d_model <= 4096 else 16)
+        return TrainConfig(microbatches=mb, **kw), None
+    return make
+
+
+VARIANTS = {
+    # remat policy: keep matmul outputs instead of recomputing everything
+    "remat_dots": _cfg(remat_policy="dots"),
+    "remat_dots_batch": _cfg(remat_policy="dots_batch"),
+    # attention tile sizes
+    "qchunk_1024": _cfg(q_chunk=1024),
+    "qchunk_256": _cfg(q_chunk=256),
+    # loss chunking
+    "loss_chunk_2048": _cfg(loss_chunk=2048),
+    # gradient accumulation depth
+    "mb2": _cfg(microbatches=2),
+    "mb4": _cfg(microbatches=4),
+    "mb8": _cfg(microbatches=8),
+    "mb16": _cfg(microbatches=16),
+    "mb32": _cfg(microbatches=32),
+    # combinations
+    "mb4_dots": _cfg(microbatches=4, remat_policy="dots"),
+    "mb8_dots": _cfg(microbatches=8, remat_policy="dots"),
+}
+
+
+def run_variant(arch_name: str, shape_name: str, mesh: str, variant: str,
+                hypothesis: str = "", strategy: str = "search") -> dict:
+    from repro import configs
+    arch = configs.get(arch_name)
+    make = VARIANTS[variant]
+    tcfg, plan = make(arch)
+    r = dryrun_cell(arch_name, shape_name, multi_pod=(mesh == "multi"),
+                    strategy_name=strategy, train_cfg=tcfg,
+                    plan_override=plan, tag=f"__{variant}")
+    base_path = RESULTS / (f"{arch_name}__{shape_name}__{mesh}__"
+                           f"{strategy}.json")
+    entry = {"cell": f"{arch_name}/{shape_name}/{mesh}", "variant": variant,
+             "hypothesis": hypothesis, "result": r.get("roofline"),
+             "mem_GiB": r.get("hbm", {}).get("per_device_total", 0) / 2**30}
+    if base_path.exists():
+        base = json.loads(base_path.read_text())
+        if base.get("status") == "ok":
+            entry["baseline"] = base["roofline"]
+            entry["baseline_mem_GiB"] = (
+                base["hbm"]["per_device_total"] / 2**30)
+    log = RESULTS.parent / "perf_log.jsonl"
+    with open(log, "a") as f:
+        f.write(json.dumps(entry) + "\n")
+    return entry
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True,
+                    help="arch/shape/mesh, e.g. llama3_2_1b/train_4k/single")
+    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--hypothesis", default="")
+    args = ap.parse_args()
+    arch, shape, mesh = args.cell.split("/")
+    e = run_variant(arch, shape, mesh, args.variant, args.hypothesis)
+    b = e.get("baseline")
+    r = e["result"]
+    print(f"variant={args.variant}")
+    if b:
+        for k in ("compute_s", "memory_s", "collective_s"):
+            print(f"  {k}: {b[k]*1e3:9.2f} -> {r[k]*1e3:9.2f} ms "
+                  f"({(r[k]/max(b[k],1e-12)-1)*100:+.1f}%)")
+        print(f"  mem: {e['baseline_mem_GiB']:.2f} -> {e['mem_GiB']:.2f} GiB")
+    else:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

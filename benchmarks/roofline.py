@@ -1,0 +1,70 @@
+"""Roofline table (deliverable g): per (arch x shape x mesh) the three
+terms from the compiled dry-run, the dominant bottleneck, and the
+MODEL_FLOPS / HLO_FLOPs utilization ratio."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro import configs
+from repro.models.arch import SHAPES
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def model_flops(arch_name: str, shape_name: str) -> float:
+    """6*N_active*D (+ causal attention FLOPs, which 6*N*D ignores and which
+    dominate at 32k+ context)."""
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    n_active = arch.active_param_count()
+    n_attn = sum(1 for l in arch.pattern if l.mixer == "attn") \
+        * arch.n_units + arch.enc_layers + (arch.n_layers if arch.enc_layers
+                                            else 0)
+    hd = arch.hd
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        attn = 3 * 2.0 * B * arch.n_heads * S * S * hd / 2 * n_attn
+        return 6.0 * n_active * shape.tokens + attn
+    if shape.kind == "prefill":
+        attn = 2.0 * B * arch.n_heads * S * S * hd / 2 * n_attn
+        return 2.0 * n_active * shape.tokens + attn
+    attn = 4.0 * B * arch.n_heads * S * hd * n_attn
+    return 2.0 * n_active * shape.global_batch + attn
+
+
+def run(print_fn=print) -> list[dict]:
+    rows = []
+    if not RESULTS.exists():
+        print_fn("roofline,SKIP,no dry-run results yet")
+        return rows
+    for f in sorted(RESULTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            continue
+        rf = d["roofline"]
+        mf = model_flops(d["arch"], d["shape"]) / d["n_chips"]
+        hlo = d["hlo_flops_per_device"]
+        util = mf / max(hlo, 1e-9)
+        step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        mfu_bound = (mf / 197e12) / max(step, 1e-12)
+        rows.append({**{k: d[k] for k in ("cell", "arch", "shape", "mesh",
+                                          "strategy", "n_chips")},
+                     **rf, "model_flops_per_dev": mf,
+                     "hlo_flops_per_dev": hlo, "useful_flops_ratio": util,
+                     "roofline_fraction": mfu_bound,
+                     "mem_GiB": d["hbm"]["per_device_total"] / 2**30,
+                     "fits": d["hbm"]["fits_16GiB"]})
+        print_fn(f"roofline,{d['cell']},compute={rf['compute_s']*1e3:.2f}ms,"
+                 f"memory={rf['memory_s']*1e3:.2f}ms,"
+                 f"coll={rf['collective_s']*1e3:.2f}ms,"
+                 f"dominant={rf['dominant']},useful={util:.2f},"
+                 f"roofline_frac={mfu_bound:.3f},"
+                 f"mem={d['hbm']['per_device_total']/2**30:.1f}GiB,"
+                 f"fits={d['hbm']['fits_16GiB']}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table3,fig7,...]
+
+Each benchmark prints ``name,...`` CSV rows and the suite writes the
+aggregate JSON to results/benchmarks.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+from . import (fig7_throughput, fig8_comm_cost, roofline, table3_search_time,
+               table4_cost_model, table5_strategy)
+
+SUITES = {
+    "table3": table3_search_time.run,     # search time DP vs DFS
+    "fig7": fig7_throughput.run,          # throughput per strategy
+    "fig8": fig8_comm_cost.run,           # comm cost per strategy
+    "table5": table5_strategy.run,        # optimal strategy dump
+    "table4": table4_cost_model.run,      # cost-model fidelity vs dry-run
+    "roofline": roofline.run,             # roofline terms per cell
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    wanted = [s for s in args.only.split(",") if s] or list(SUITES)
+
+    out = {}
+    for name in wanted:
+        t0 = time.perf_counter()
+        print(f"=== {name} ===")
+        out[name] = SUITES[name]()
+        print(f"=== {name} done in {time.perf_counter()-t0:.1f}s ===")
+    path = Path(__file__).resolve().parents[1] / "results"
+    path.mkdir(exist_ok=True)
+    (path / "benchmarks.json").write_text(json.dumps(out, indent=1,
+                                                     default=str))
+    print(f"wrote {path/'benchmarks.json'}")
+
+
+if __name__ == "__main__":
+    main()

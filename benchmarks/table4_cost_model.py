@@ -1,0 +1,52 @@
+"""Paper Table 4: cost-model fidelity.
+
+The paper compares estimated vs measured per-step time (within 10%).  With
+no TPU to measure, the analogous check compares the cost model's predicted
+per-device collective BYTES against the bytes actually present in the
+compiled dry-run HLO (results/dryrun/*.json written by the dry-run pass) —
+the quantity the strategy search actually trades off.  Also reports the
+cost model's time prediction vs the dry-run roofline lower bound
+max(compute_s, memory_s, collective_s).
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def run(print_fn=print) -> list[dict]:
+    rows = []
+    if not RESULTS.exists():
+        print_fn("table4,SKIP,no dry-run results yet "
+                 "(python -m repro.launch.dryrun --all)")
+        return rows
+    for f in sorted(RESULTS.glob("*__search.json")):
+        d = json.loads(f.read_text())
+        if d.get("status") != "ok":
+            continue
+        model_bytes = d["model_comm_bytes"]["total"]
+        hlo_bytes = d["collective_bytes_per_device"]["total"]
+        rf = d["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        pred = d["search_cost_s"]
+        rows.append({
+            "cell": d["cell"],
+            "model_comm_GB": model_bytes / 1e9,
+            "hlo_comm_GB": hlo_bytes / 1e9,
+            "comm_ratio": model_bytes / max(hlo_bytes, 1e-9),
+            "pred_time_s": pred,
+            "roofline_bound_s": bound,
+            "time_ratio": pred / max(bound, 1e-12),
+        })
+        print_fn(f"table4,{d['cell']},model_comm={model_bytes/1e9:.2f}GB,"
+                 f"hlo_comm={hlo_bytes/1e9:.2f}GB,"
+                 f"ratio={model_bytes/max(hlo_bytes,1e-9):.2f},"
+                 f"pred={pred*1e3:.1f}ms,bound={bound*1e3:.1f}ms")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,15 @@
+"""Batched serving example: prefill a batch of prompts through a reduced
+qwen2.5 (GQA + QKV-bias) and greedy-decode continuations with the KV cache.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen2.5-3b", "--width", "256",
+                "--depth", "4", "--vocab", "512", "--batch", "4",
+                "--prompt-len", "64", "--gen", "24"] + sys.argv[1:]
+    serve.main()

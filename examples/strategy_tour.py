@@ -1,0 +1,37 @@
+"""A tour of the strategy-search core across architectures and meshes:
+how the optimal layer-wise strategy changes with scale and model family
+(the paper's Section 6.3 analysis).
+
+    PYTHONPATH=src python examples/strategy_tour.py
+"""
+
+from repro import configs
+from repro.core import (AxisSpec, BASELINES, CostModel, ICI_BW, MeshSpec,
+                        POD_BW, find_strategy, multi_pod_mesh_spec)
+from repro.models.arch import SHAPES
+from repro.models.graph_export import export_graph
+
+MESHES = {
+    "4 chips (2x2)": MeshSpec(axes=(AxisSpec("data", 2, ICI_BW),
+                                    AxisSpec("model", 2, ICI_BW))),
+    "64 chips (8x8)": MeshSpec(axes=(AxisSpec("data", 8, ICI_BW),
+                                     AxisSpec("model", 8, ICI_BW))),
+    "512 chips (2x16x16)": multi_pod_mesh_spec(),
+}
+
+for arch_name, shape_name in (("olmoe-1b-7b", "train_4k"),
+                              ("jamba-1.5-large-398b", "train_4k"),
+                              ("rwkv6-1.6b", "long_500k")):
+    arch = configs.get(arch_name)
+    shape = SHAPES[shape_name]
+    graph = export_graph(arch, shape)
+    training = shape.kind == "train"
+    print(f"\n================= {arch_name} / {shape_name} =================")
+    for mesh_name, mesh in MESHES.items():
+        s = find_strategy(graph, mesh, training=training)
+        cm = CostModel(mesh, training=training)
+        best = min(cm.total_time(graph, fn(graph, mesh))
+                   for fn in BASELINES.values())
+        print(f"\n--- {mesh_name}: {s.cost*1e3:.2f} ms/step "
+              f"({best/s.cost:.2f}x vs best baseline) ---")
+        print(s.describe(graph, mesh, max_rows=10))

@@ -1,0 +1,55 @@
+"""Assigned architecture configs (``--arch <id>``).
+
+Each module defines ``ARCH`` (the exact assigned config) and ``reduced()``
+(a small same-family config for CPU smoke tests).  ``get(name)`` /
+``reduced(name)`` look up by id; ``ALL_ARCHS`` lists the ids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+ALL_ARCHS = [
+    "phi3_5_moe_42b",
+    "olmoe_1b_7b",
+    "rwkv6_1b6",
+    "llama3_2_1b",
+    "olmo_1b",
+    "qwen2_5_3b",
+    "granite_3_2b",
+    "jamba_1_5_large",
+    "internvl2_76b",
+    "seamless_m4t_v2",
+]
+
+# assignment ids -> module names
+ALIASES = {
+    "phi3.5-moe-42b-a6.6b": "phi3_5_moe_42b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "rwkv6-1.6b": "rwkv6_1b6",
+    "llama3.2-1b": "llama3_2_1b",
+    "olmo-1b": "olmo_1b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "granite-3-2b": "granite_3_2b",
+    "jamba-1.5-large-398b": "jamba_1_5_large",
+    "internvl2-76b": "internvl2_76b",
+    "seamless-m4t-large-v2": "seamless_m4t_v2",
+}
+
+
+def _module(name: str):
+    name = ALIASES.get(name, name).replace("-", "_").replace(".", "_")
+    return importlib.import_module(f"repro.configs.{name}")
+
+
+def get(name: str):
+    return _module(name).ARCH
+
+
+def reduced(name: str):
+    return _module(name).reduced()
+
+
+def all_archs():
+    return {n: get(n) for n in ALL_ARCHS}

@@ -1,0 +1,45 @@
+"""Core: layer-wise parallelism strategy search (the paper's contribution).
+
+Public API:
+
+    from repro.core import (
+        MeshSpec, single_pod_mesh_spec, multi_pod_mesh_spec,
+        LayerConfig, enumerate_configs,
+        CompGraph, LayerNode, Edge, TensorSpec, Strategy,
+        CostModel,
+        find_strategy, find_strategy_brute_force, SearchOptions,
+        data_parallel, model_parallel, owt,
+    )
+"""
+
+from .config import DATA_DIMS, PARAM_DIMS, LayerConfig, enumerate_configs
+from .cost_model import CostModel
+from .device import (
+    GiB,
+    ICI_BW,
+    POD_BW,
+    TPU_V5E,
+    AxisSpec,
+    ChipSpec,
+    CollectiveCost,
+    MeshSpec,
+    multi_pod_mesh_spec,
+    single_pod_mesh_spec,
+)
+from .elimination import GraphOptimizer, brute_force_optimize
+from .graph import CompGraph, Edge, LayerNode, Strategy, TensorSpec, uniform_strategy
+from .search import SearchOptions, config_space, find_strategy, find_strategy_brute_force
+from .sharding import constrain, current_mesh, pspec, sharding, use_mesh
+from .strategies import BASELINES, data_parallel, model_parallel, owt
+
+__all__ = [
+    "AxisSpec", "BASELINES", "ChipSpec", "CollectiveCost", "CompGraph",
+    "CostModel", "DATA_DIMS", "Edge", "GiB", "GraphOptimizer", "ICI_BW",
+    "LayerConfig", "LayerNode", "MeshSpec", "PARAM_DIMS", "POD_BW",
+    "SearchOptions", "Strategy", "TensorSpec", "TPU_V5E",
+    "brute_force_optimize", "config_space", "constrain", "current_mesh",
+    "data_parallel", "enumerate_configs", "find_strategy",
+    "find_strategy_brute_force", "model_parallel", "multi_pod_mesh_spec",
+    "owt", "pspec", "sharding", "single_pod_mesh_spec", "uniform_strategy",
+    "use_mesh",
+]

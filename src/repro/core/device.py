@@ -1,0 +1,219 @@
+"""Device & mesh hardware model.
+
+The paper models hardware as a *device graph* with per-connection bandwidth
+(Section 4).  A TPU pod slice is homogeneous with named-axis topology, so the
+device graph collapses to: a chip spec (peak FLOP/s, HBM bandwidth/capacity)
+plus a per-mesh-axis link bandwidth.  The ``pod`` axis crosses the slower
+inter-pod fabric and carries a discounted bandwidth; the search therefore
+learns to keep all-to-all-heavy dimensions off that axis — the TPU-native
+analogue of the paper's intra-node NVLink vs inter-node Infiniband split.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+
+GiB = 1024**3
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    """A single accelerator chip (roofline constants)."""
+
+    name: str
+    peak_flops: float        # bf16 FLOP/s
+    hbm_bw: float            # bytes/s
+    hbm_bytes: float         # capacity, bytes
+    vmem_bytes: float        # on-chip vector memory, bytes
+    # Fraction of peak realistically achievable on dense matmuls; used by the
+    # cost model so t_C is not absurdly optimistic.  Calibratable.
+    mxu_efficiency: float = 0.55
+    hbm_efficiency: float = 0.8
+
+    @property
+    def eff_flops(self) -> float:
+        return self.peak_flops * self.mxu_efficiency
+
+    @property
+    def eff_hbm_bw(self) -> float:
+        return self.hbm_bw * self.hbm_efficiency
+
+
+# TPU v5e (the grading target): 197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB,
+# ~50 GB/s per ICI link.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * GiB,
+    vmem_bytes=128 * 1024**2,
+)
+
+
+@dataclass(frozen=True)
+class CollectiveCost:
+    """Cost of one collective: wall seconds and per-chip bytes sent."""
+
+    time: float
+    bytes: float
+
+    def __add__(self, other: "CollectiveCost") -> "CollectiveCost":
+        return CollectiveCost(self.time + other.time, self.bytes + other.bytes)
+
+    def __mul__(self, k: float) -> "CollectiveCost":
+        return CollectiveCost(self.time * k, self.bytes * k)
+
+    __rmul__ = __mul__
+
+
+ZERO_COST = CollectiveCost(0.0, 0.0)
+
+
+@dataclass(frozen=True)
+class AxisSpec:
+    """One named mesh axis: its size and the link bandwidth collectives over
+    it see (bytes/s per chip)."""
+
+    name: str
+    size: int
+    bw: float  # bytes/s per chip for ring collectives along this axis
+
+
+ICI_BW = 50e9        # intra-pod ICI, per link
+POD_BW = 12.5e9      # inter-pod (DCN/optical) — heavily discounted
+
+
+@dataclass(frozen=True)
+class MeshSpec:
+    """Named-axis device mesh + chip roofline constants.
+
+    This is the cost model's entire view of hardware (paper's device graph).
+    """
+
+    axes: tuple[AxisSpec, ...]
+    chip: ChipSpec = TPU_V5E
+
+    # ------------------------------------------------------------------ #
+    def __post_init__(self):
+        names = [a.name for a in self.axes]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate mesh axis names: {names}")
+
+    @property
+    def axis_names(self) -> tuple[str, ...]:
+        return tuple(a.name for a in self.axes)
+
+    @property
+    def num_devices(self) -> int:
+        return math.prod(a.size for a in self.axes)
+
+    def axis(self, name: str) -> AxisSpec:
+        for a in self.axes:
+            if a.name == name:
+                return a
+        raise KeyError(f"no mesh axis {name!r} in {self.axis_names}")
+
+    def axis_size(self, name: str) -> int:
+        return self.axis(name).size
+
+    def degree(self, axes: tuple[str, ...]) -> int:
+        return math.prod(self.axis_size(a) for a in axes)
+
+    # ---- collective primitives (ring algorithms) ---------------------- #
+    # Each returns ``CollectiveCost(time, bytes)``: seconds on the slowest
+    # participating chip, and per-chip bytes sent over the wire.
+
+    def all_reduce(self, bytes_full: float, axes: tuple[str, ...]) -> "CollectiveCost":
+        """Ring all-reduce of a ``bytes_full`` buffer over ``axes``.
+
+        Hierarchical: reduce-scatter+all-gather along each axis in turn
+        (2*(s-1)/s per stage); after each reduce-scatter stage the live shard
+        shrinks by the axis size, matching XLA's hierarchical lowering.
+        """
+        t = b = 0.0
+        live = bytes_full
+        for name in axes:
+            a = self.axis(name)
+            if a.size == 1:
+                continue
+            stage = 2.0 * (a.size - 1) / a.size * live
+            t += stage / a.bw
+            b += stage
+            live /= a.size
+        return CollectiveCost(t, b)
+
+    def reduce_scatter(self, bytes_full: float, axes: tuple[str, ...]) -> "CollectiveCost":
+        t = b = 0.0
+        live = bytes_full
+        for name in axes:
+            a = self.axis(name)
+            if a.size == 1:
+                continue
+            stage = (a.size - 1) / a.size * live
+            t += stage / a.bw
+            b += stage
+            live /= a.size
+        return CollectiveCost(t, b)
+
+    def all_gather(self, bytes_shard: float, axes: tuple[str, ...]) -> "CollectiveCost":
+        """Gather a per-chip ``bytes_shard`` over ``axes`` (result grows)."""
+        t = b = 0.0
+        live = bytes_shard
+        for name in axes:
+            a = self.axis(name)
+            if a.size == 1:
+                continue
+            stage = (a.size - 1) * live
+            t += stage / a.bw
+            b += stage
+            live *= a.size
+        return CollectiveCost(t, b)
+
+    def all_to_all(self, bytes_local: float, axes: tuple[str, ...]) -> "CollectiveCost":
+        """All-to-all of the per-chip ``bytes_local`` buffer over ``axes``."""
+        t = b = 0.0
+        for name in axes:
+            a = self.axis(name)
+            if a.size == 1:
+                continue
+            stage = (a.size - 1) / a.size * bytes_local
+            t += stage / a.bw
+            b += stage
+        return CollectiveCost(t, b)
+
+    def min_bw(self, axes: tuple[str, ...]) -> float:
+        if not axes:
+            return ICI_BW
+        return min(self.axis(a).bw for a in axes)
+
+    # ------------------------------------------------------------------ #
+    def subspec(self, **sizes: int) -> "MeshSpec":
+        """A copy with some axis sizes overridden (for what-if analysis)."""
+        new = tuple(
+            dataclasses.replace(a, size=sizes.get(a.name, a.size)) for a in self.axes
+        )
+        return MeshSpec(axes=new, chip=self.chip)
+
+
+def single_pod_mesh_spec(data: int = 16, model: int = 16,
+                         chip: ChipSpec = TPU_V5E) -> MeshSpec:
+    """The production single-pod mesh: 16x16 = 256 chips."""
+    return MeshSpec(
+        axes=(AxisSpec("data", data, ICI_BW), AxisSpec("model", model, ICI_BW)),
+        chip=chip,
+    )
+
+
+def multi_pod_mesh_spec(pods: int = 2, data: int = 16, model: int = 16,
+                        chip: ChipSpec = TPU_V5E) -> MeshSpec:
+    """The production multi-pod mesh: 2 x 16 x 16 = 512 chips."""
+    return MeshSpec(
+        axes=(
+            AxisSpec("pod", pods, POD_BW),
+            AxisSpec("data", data, ICI_BW),
+            AxisSpec("model", model, ICI_BW),
+        ),
+        chip=chip,
+    )

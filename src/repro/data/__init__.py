@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLM, SyntheticSeq2Seq, SyntheticVLM, make_dataset
+
+__all__ = ["SyntheticLM", "SyntheticSeq2Seq", "SyntheticVLM", "make_dataset"]

@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On a CPU host the kernels execute in ``interpret=True`` mode (Pallas TPU
+kernels cannot lower to the CPU backend); on TPU they compile natively.
+``repro.models.layers`` keeps a pure-XLA path for the SPMD dry-run — these
+wrappers are the drop-in hot-spot implementations for real hardware and the
+oracle-validated artifacts for tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .decode_attention import decode_attention as _decode
+from .flash_attention import flash_attention as _flash
+from .rwkv6_scan import wkv6 as _wkv6
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
+                    block_k: int = 256, interpret: bool | None = None):
+    """q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+                  interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
+                     interpret: bool | None = None):
+    """q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return _decode(q, k, v, kv_len, block_k=block_k, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
+    """RWKV6 recurrence; r/k/v/w: (B, H, T, N); u: (H, N)."""
+    interpret = _on_cpu() if interpret is None else interpret
+    return _wkv6(r, k, v, w, u, chunk=chunk, interpret=interpret)

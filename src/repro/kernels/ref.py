@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D).  f32 softmax."""
+    B, H, S, D = q.shape
+    _, KH, T, _ = k.shape
+    G = H // KH
+    qg = q.reshape(B, KH, G, S, D)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    if causal:
+        mask = jnp.arange(S)[:, None] >= jnp.arange(T)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, S, D).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                         kv_len: jax.Array | int) -> jax.Array:
+    """q: (B, H, D); k/v: (B, KH, T, D); attends to positions < kv_len."""
+    B, H, D = q.shape
+    _, KH, T, _ = k.shape
+    G = H // KH
+    qg = q.reshape(B, KH, G, D)
+    s = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(T)[None, None, None, :] < kv_len
+    s = jnp.where(valid, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, D).astype(q.dtype)
+
+
+def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+             u: jax.Array, state: jax.Array | None = None):
+    """RWKV6 recurrence oracle.
+
+    r/k/v/w: (B, T, H, N); u: (H, N); state: (B, H, N, N) or None.
+    Returns (out (B, T, H, N), final_state).
+
+      out_t = r_t · (S + u ⊙ (k_t ⊗ v_t));  S ← diag(w_t) S + k_t ⊗ v_t
+    """
+    B, T, H, N = r.shape
+    if state is None:
+        state = jnp.zeros((B, H, N, N), jnp.float32)
+    f32 = lambda a: a.astype(jnp.float32)
+    r, k, v, w = map(f32, (r, k, v, w))
+    u = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs
+        kv = kt[..., :, None] * vt[..., None, :]
+        o = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, o
+
+    tm = lambda a: a.transpose(1, 0, 2, 3)
+    S, out = jax.lax.scan(step, state, (tm(r), tm(k), tm(v), tm(w)))
+    return out.transpose(1, 0, 2, 3), S

@@ -1,0 +1,76 @@
+"""RWKV6 (WKV6) recurrence kernel for TPU (Pallas).
+
+TPU adaptation of the Finch recurrence (arXiv:2404.05892): the (N x N)
+per-head state lives in VMEM scratch in f32 and is carried across a
+*sequential* chunk grid dimension (the same grid-revisiting idiom as flash
+attention); r/k/v/w stream HBM->VMEM chunk by chunk.  Within a chunk the
+recurrence is stepped with ``fori_loop`` outer products — numerically exact
+(the chunked-parallel GLA form needs cumulative-decay exponentials that
+under/overflow in bf16 for w^64; the sequential-in-VMEM form does not).
+
+Layout: r/k/v/w (B, H, T, N) with N the head size (64); u (H, N).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
+                 chunk: int, n_chunks: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    u = u_ref[0].astype(jnp.float32)                     # (N,)
+
+    def step(t, S):
+        rt = r_ref[0, 0, t].astype(jnp.float32)          # (N,)
+        kt = k_ref[0, 0, t].astype(jnp.float32)
+        vt = v_ref[0, 0, t].astype(jnp.float32)
+        wt = w_ref[0, 0, t].astype(jnp.float32)
+        kv = kt[:, None] * vt[None, :]                   # (N, N)
+        o = rt @ (S + u[:, None] * kv)                   # (N,)
+        o_ref[0, 0, t] = o.astype(o_ref.dtype)
+        return wt[:, None] * S + kv
+
+    state_ref[...] = jax.lax.fori_loop(0, chunk, step, state_ref[...])
+
+
+def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+         u: jax.Array, *, chunk: int = 64,
+         interpret: bool = False) -> jax.Array:
+    """r/k/v/w: (B, H, T, N); u: (H, N) -> out (B, H, T, N)."""
+    B, H, T, N = r.shape
+    chunk = min(chunk, T)
+    assert T % chunk == 0, (T, chunk)
+    n_chunks = T // chunk
+    grid = (B * H, n_chunks)
+
+    kernel = functools.partial(_wkv6_kernel, chunk=chunk, n_chunks=n_chunks)
+
+    def spec(ref_kind: str):
+        if ref_kind == "seq":
+            return pl.BlockSpec((1, 1, chunk, N),
+                                lambda bh, ci: (bh // H, bh % H, ci, 0))
+        return pl.BlockSpec((1, N), lambda bh, ci: (bh % H, 0))
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[spec("seq"), spec("seq"), spec("seq"), spec("seq"),
+                  spec("u")],
+        out_specs=spec("seq"),
+        out_shape=jax.ShapeDtypeStruct((B, H, T, N), r.dtype),
+        scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(r, k, v, w, u)

@@ -1,0 +1,259 @@
+"""Trip-count-aware roofline analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` visits every instruction ONCE — a collective
+or matmul inside a ``lax.scan``-lowered while loop is counted a single
+time even though it executes ``trip_count`` times, so scanned-layer models
+(everything here) would be understated by ~n_layers.  This module parses
+the optimized HLO text instead:
+
+  * builds the computation call graph (entry -> while bodies -> fusions)
+    with multiplicative trip counts (parsed from each while condition's
+    comparison constant);
+  * FLOPs: every ``dot`` instruction contributes 2 * prod(output shape) *
+    prod(contracting dims), times its execution multiplier;
+  * HBM bytes: fusion-boundary traffic — operands + outputs of top-level
+    instructions (fusion internals live in registers/VMEM), times
+    multiplier.  This is *tighter* than cost_analysis' per-op "bytes
+    accessed", which double-counts within fusions;
+  * collective bytes: operand sizes of all-reduce / all-gather /
+    reduce-scatter / all-to-all / collective-permute, times multiplier.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|\w+\[[\d,]*\][^\s]*)\s+"
+    r"([\w\-]+)\(")
+_CALL_RE = re.compile(r"(?:calls|body|condition|branch_computations)="
+                      r"\{?%?([\w.\-]+)")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(type_str: str) -> float:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(type_str: str) -> tuple[str, list[int]] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",") if d]
+
+
+@dataclass
+class _Instr:
+    name: str
+    out_type: str
+    op: str
+    line: str
+    operands: list[str] = field(default_factory=list)
+    calls: list[str] = field(default_factory=list)
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list[_Instr] = field(default_factory=list)
+    by_name: dict = field(default_factory=dict)
+
+
+def parse_hlo(text: str) -> dict[str, _Comp]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    header = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = header.match(line.strip())
+            if m:
+                cur = _Comp(m.group(1))
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, out_type, op = m.groups()
+        rest = line[m.end():]
+        # operands: %names before the closing paren of the op call
+        depth = 1
+        i = 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operand_str = rest[:i]
+        ins = _Instr(name, out_type, op, line,
+                     operands=_OPERAND_RE.findall(operand_str),
+                     calls=_CALL_RE.findall(line))
+        cur.instrs.append(ins)
+        cur.by_name[name] = ins
+    return comps
+
+
+def _trip_count(cond: _Comp) -> int:
+    """jax scans lower to while loops whose condition compares the
+    induction variable to a constant — take the largest constant."""
+    best = 1
+    for ins in cond.instrs:
+        if ins.op == "constant":
+            m = re.search(r"constant\((\d+)\)", ins.line)
+            if m:
+                best = max(best, int(m.group(1)))
+    return best
+
+
+def _dot_flops(ins: _Instr, comp: _Comp) -> float:
+    out = _shape_elems(ins.out_type)
+    if out is None:
+        return 0.0
+    _, out_dims = out
+    n_out = 1
+    for d in out_dims:
+        n_out *= d
+    # contracting dims of the lhs operand
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", ins.line)
+    contract = 1
+    if m and ins.operands:
+        lhs = comp.by_name.get(ins.operands[0])
+        lhs_shape = None
+        if lhs is not None:
+            got = _shape_elems(lhs.out_type)
+            lhs_shape = got[1] if got else None
+        if lhs_shape:
+            for idx in (int(x) for x in m.group(1).split(",") if x):
+                if idx < len(lhs_shape):
+                    contract *= lhs_shape[idx]
+    return 2.0 * n_out * contract
+
+
+def analyze(text: str) -> dict:
+    comps = parse_hlo(text)
+    entry = None
+    for name, c in comps.items():
+        if name.startswith("main") or name.startswith("cluster") or \
+                name.endswith(".1") is False and entry is None:
+            entry = entry or c
+    # ENTRY computation: jax names it e.g. main.1234
+    for name in comps:
+        if name.startswith("main"):
+            entry = comps[name]
+    if entry is None:
+        raise ValueError("no entry computation found")
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll: dict[str, float] = {k: 0.0 for k in COLLECTIVES}
+    coll_counts: dict[str, float] = {k: 0 for k in COLLECTIVES}
+    top: list[tuple[float, str]] = []
+
+    seen_stack: set[str] = set()
+
+    def visit(comp: _Comp, mult: float):
+        nonlocal flops, hbm_bytes
+        if comp.name in seen_stack:
+            return
+        seen_stack.add(comp.name)
+        for ins in comp.instrs:
+            base = ins.op
+            if base.endswith("-start"):
+                base = base[:-6]
+            if base in COLLECTIVES:
+                # operand convention: bytes each chip contributes
+                op_bytes = 0.0
+                for o in ins.operands:
+                    src = comp.by_name.get(o)
+                    if src is not None:
+                        op_bytes += _shape_bytes(src.out_type)
+                if op_bytes == 0.0:
+                    op_bytes = _shape_bytes(ins.out_type)
+                coll[base] += mult * op_bytes
+                coll_counts[base] += mult
+                top.append((mult * op_bytes,
+                            f"{base} {ins.out_type[:40]} x{mult:.0f} "
+                            f"in {comp.name[:40]}"))
+                hbm_bytes += mult * (op_bytes + _shape_bytes(ins.out_type))
+            elif base == "dot":
+                flops += mult * _dot_flops(ins, comp)
+                op_b = sum(_shape_bytes(comp.by_name[o].out_type)
+                           for o in ins.operands if o in comp.by_name)
+                hbm_bytes += mult * (op_b + _shape_bytes(ins.out_type))
+            elif base == "fusion":
+                # Only dot-bearing fusions count as HBM traffic sites: on
+                # TPU the elementwise chains fuse into the surrounding
+                # matmuls, so pure-elementwise CPU fusions are VMEM-
+                # resident and must not inflate the roofline.
+                has_dot = False
+                for callee in ins.calls:
+                    sub = comps.get(callee)
+                    if sub is not None:
+                        for sub_ins in sub.instrs:
+                            if sub_ins.op == "dot":
+                                has_dot = True
+                                flops += mult * _dot_flops(sub_ins, sub)
+                if has_dot:
+                    op_b = sum(_shape_bytes(comp.by_name[o].out_type)
+                               for o in ins.operands if o in comp.by_name)
+                    hbm_bytes += mult * (op_b + _shape_bytes(ins.out_type))
+            elif base == "while":
+                cond_name = None
+                body_name = None
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                cond_name = mc.group(1) if mc else None
+                body_name = mb.group(1) if mb else None
+                trip = _trip_count(comps[cond_name]) if cond_name in comps \
+                    else 1
+                if body_name in comps:
+                    visit(comps[body_name], mult * trip)
+            elif base in ("conditional", "call", "custom-call"):
+                for callee in ins.calls:
+                    if callee in comps:
+                        visit(comps[callee], mult)
+            elif base in ("copy", "gather", "scatter", "dynamic-slice",
+                          "dynamic-update-slice", "sort", "concatenate"):
+                # genuinely memory-bound data movement; pure elementwise /
+                # layout ops are excluded (a TPU compile fuses them — the
+                # CPU backend's weaker fusion must not inflate the roofline)
+                op_b = sum(_shape_bytes(comp.by_name[o].out_type)
+                           for o in ins.operands if o in comp.by_name)
+                hbm_bytes += mult * (op_b + _shape_bytes(ins.out_type))
+        seen_stack.discard(comp.name)
+
+    visit(entry, 1.0)
+    coll_total = sum(coll.values())
+    top.sort(reverse=True)
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": {**coll, "total": coll_total},
+        "collective_exec_counts": coll_counts,
+        "top_collectives": [f"{b/1e9:.1f}GB {d}" for b, d in top[:12]],
+    }

@@ -1,0 +1,32 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state; callers (dryrun) are
+responsible for setting ``--xla_force_host_platform_device_count`` before
+jax initializes.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.core.device import MeshSpec, multi_pod_mesh_spec, single_pod_mesh_spec
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
+    """The cost model's view of the same mesh."""
+    return multi_pod_mesh_spec() if multi_pod else single_pod_mesh_spec()
+
+
+def make_smoke_mesh(data: int = 1, model: int = 1):
+    """Single-device mesh for CPU smoke tests."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,155 @@
+"""End-to-end training driver.
+
+Runs the full stack on whatever devices exist: search a strategy for the
+actual mesh (or take a baseline), realize it, build the train step, stream
+the synthetic pipeline, checkpoint periodically, and resume after failures
+(``--resume`` restores the newest complete checkpoint and continues the
+data stream deterministically from the restored step).
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b \
+        --steps 200 --batch 8 --seq 256 --width 256 --depth 8
+
+Reduced dims (``--width/--depth/--vocab``) scale the assigned arch down for
+single-host runs; omit them on a real pod.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.checkpoint import CheckpointManager
+from repro.core import find_strategy, BASELINES
+from repro.core.device import AxisSpec, ICI_BW, MeshSpec
+from repro.core.sharding import use_mesh
+from repro.data import make_dataset
+from repro.models import model_module, strategy_to_plan, uniform_plan
+from repro.models.arch import ShapeSpec
+from repro.models.graph_export import export_graph
+from repro.optim import AdamWConfig, adamw_init
+from repro.train import (TrainConfig, batch_pspecs, make_train_step,
+                         param_pspecs, to_shardings)
+
+
+def reduced_arch(arch, width, depth, vocab, experts):
+    kw = {}
+    if width:
+        head = max(1, arch.n_heads)
+        kw.update(d_model=width, d_ff=width * 4,
+                  moe_d_ff=width * 4 if arch.moe_d_ff else 0,
+                  head_dim=0)
+        if width % arch.n_heads != 0:
+            kw.update(n_heads=8, n_kv_heads=min(8, arch.n_kv_heads))
+    if depth:
+        period = arch.period
+        kw["n_layers"] = max(period, (depth // period) * period)
+        if arch.enc_layers:
+            kw["enc_layers"] = depth
+    if vocab:
+        kw["vocab"] = vocab
+    if experts and arch.n_experts:
+        kw.update(n_experts=experts, top_k=min(arch.top_k, experts))
+    return dataclasses.replace(arch, **kw) if kw else arch
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--width", type=int, default=0)
+    ap.add_argument("--depth", type=int, default=0)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--experts", type=int, default=0)
+    ap.add_argument("--strategy", default="search",
+                    choices=["search", "data", "model", "owt", "none"])
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--metrics-out", default="")
+    args = ap.parse_args()
+
+    arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
+                        args.vocab, args.experts)
+    shape = ShapeSpec("custom", args.seq, args.batch, "train")
+    n_dev = jax.device_count()
+
+    # mesh over available devices: prefer pure-data on small hosts
+    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh_spec = MeshSpec(axes=(AxisSpec("data", n_dev, ICI_BW),
+                               AxisSpec("model", 1, ICI_BW)))
+
+    if args.strategy == "none" or n_dev == 1:
+        plan = uniform_plan(arch, data_axes=("data",))
+    else:
+        graph = export_graph(arch, shape)
+        strat = (find_strategy(graph, mesh_spec, training=True)
+                 if args.strategy == "search"
+                 else BASELINES[args.strategy](graph, mesh_spec))
+        plan = strategy_to_plan(strat, arch)
+        print(f"strategy cost model: {getattr(strat, 'cost', float('nan')):.6f}s/step")
+
+    mod = model_module(arch)
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
+                          total_steps=args.steps)
+    tcfg = TrainConfig(optimizer=opt_cfg, q_chunk=256, time_chunk=32,
+                       remat=True)
+    step_fn = make_train_step(arch, plan, tcfg)
+    ds = make_dataset(arch, shape)
+
+    ckpt = CheckpointManager(args.ckpt_dir)
+    init = mod.init_encdec if arch.enc_layers else mod.init_lm
+    params = init(jax.random.PRNGKey(0), arch, jnp.float32)
+    opt_state = adamw_init(params)
+    start_step = 0
+    if args.resume:
+        like = {"params": params, "opt": opt_state}
+        step, state = ckpt.restore_latest(like)
+        if step is not None:
+            params, opt_state = state["params"], state["opt"]
+            start_step = step
+            print(f"resumed from step {step}")
+
+    p_sh = to_shardings(param_pspecs(params, arch, plan), mesh, like=params)
+    params = jax.device_put(params, p_sh)
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    history = []
+    with use_mesh(mesh):
+        t0 = time.time()
+        for step in range(start_step, args.steps):
+            batch = jax.tree.map(jnp.asarray, ds.batch_at(step))
+            params, opt_state, metrics = jit_step(params, opt_state, batch)
+            if step % args.log_every == 0 or step == args.steps - 1:
+                m = {k: float(v) for k, v in metrics.items()}
+                dt = time.time() - t0
+                tok_s = shape.tokens * (step - start_step + 1) / max(dt, 1e-9)
+                print(f"step {step:5d} loss={m['loss']:.4f} "
+                      f"nll={m['nll']:.4f} acc={m['accuracy']:.3f} "
+                      f"gnorm={m['grad_norm']:.2f} tok/s={tok_s:.0f}")
+                history.append({"step": step, **m})
+            if args.ckpt_every and (step + 1) % args.ckpt_every == 0:
+                ckpt.save(step + 1, {"params": params, "opt": opt_state})
+    if args.ckpt_every:
+        ckpt.save(args.steps, {"params": params, "opt": opt_state})
+    if args.metrics_out:
+        Path(args.metrics_out).write_text(json.dumps(history, indent=1))
+    first, last = history[0]["nll"], history[-1]["nll"]
+    print(f"nll {first:.4f} -> {last:.4f} "
+          f"({'LEARNED' if last < first - 0.2 else 'check'})")
+
+
+if __name__ == "__main__":
+    main()

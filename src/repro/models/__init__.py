@@ -1,0 +1,14 @@
+"""Model zoo: decoder-only LMs (dense/MoE/RWKV/Mamba-hybrid/VLM) and
+encoder-decoder (audio), all pure JAX, all strategy-plan aware."""
+
+from .arch import SHAPES, ArchConfig, LayerSpec, ShapeSpec
+from .plan import ModelPlan, Segment, strategy_to_plan, uniform_plan
+
+
+def is_encdec(arch: ArchConfig) -> bool:
+    return arch.enc_layers > 0
+
+
+def model_module(arch: ArchConfig):
+    from . import encdec, lm
+    return encdec if is_encdec(arch) else lm

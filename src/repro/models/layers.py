@@ -1,0 +1,297 @@
+"""Pure-JAX model primitives shared by every architecture.
+
+All functions are functional (params-in, activations-out) and accept a
+``sub``-plan: a mapping ``sublayer-name -> LayerConfig`` used to apply the
+searched strategy via ``with_sharding_constraint`` (no-op without an active
+mesh, so smoke tests run unchanged on one CPU device).
+
+Attention is computed with a q-chunked online-softmax scan (an XLA-level
+flash attention): peak memory is O(q_chunk * kv_len) instead of O(S^2).
+The Pallas TPU kernel in ``repro.kernels`` is the hot-spot implementation
+for real hardware; the XLA path is what the (CPU-hosted) dry-run lowers.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LayerConfig
+from repro.core.sharding import constrain
+
+# --------------------------------------------------------------------------- #
+# init helpers
+# --------------------------------------------------------------------------- #
+def dense_init(key, shape, dtype, fan_in: int | None = None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.02).astype(dtype)
+
+
+# --------------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------------- #
+def rms_norm(x: jax.Array, scale: jax.Array | None, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    if scale is not None:
+        y = y * (1.0 + scale.astype(jnp.float32))
+    return y.astype(dt)
+
+
+def init_norm(arch, dtype):
+    if arch.nonparam_norm:
+        return {}
+    return {"scale": jnp.zeros((arch.d_model,), dtype)}
+
+
+def apply_norm(p: dict, x: jax.Array) -> jax.Array:
+    return rms_norm(x, p.get("scale"))
+
+
+# --------------------------------------------------------------------------- #
+# rotary embeddings
+# --------------------------------------------------------------------------- #
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D) with D even; positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]     # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------------- #
+def init_attention(key, arch, dtype):
+    d, hd = arch.d_model, arch.hd
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, arch.n_heads, hd), dtype, fan_in=d),
+        "wk": dense_init(ks[1], (d, arch.n_kv_heads, hd), dtype, fan_in=d),
+        "wv": dense_init(ks[2], (d, arch.n_kv_heads, hd), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (arch.n_heads, hd, d), dtype,
+                         fan_in=arch.n_heads * hd),
+    }
+    if arch.qkv_bias:
+        p["bq"] = jnp.zeros((arch.n_heads, hd), dtype)
+        p["bk"] = jnp.zeros((arch.n_kv_heads, hd), dtype)
+        p["bv"] = jnp.zeros((arch.n_kv_heads, hd), dtype)
+    if arch.qk_norm:
+        p["q_norm"] = jnp.zeros((hd,), dtype)
+        p["k_norm"] = jnp.zeros((hd,), dtype)
+    return p
+
+
+def _mha_core(q, k, v, *, causal: bool, q_positions, kv_positions,
+              q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax (flash-style) attention in pure XLA.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, H, D) — KV already expanded to the full
+    head count (GQA expansion happens in the caller as a broadcast that
+    GSPMD fuses with the per-shard slice, so the heads dim stays shardable
+    at full TP degree; reshaping H -> (KH, G) instead makes the dim
+    unshardable when the axis size exceeds KH).
+    Returns (B, Sq, H, D).  Outer scan over q chunks, inner scan over kv
+    chunks carrying (m, l, acc) running f32 statistics — the live score
+    buffer is (B, H, q_chunk, kv_chunk).
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    def attend_chunk(qc, qpos):
+        """qc: (B, C, H, D) -> (B, C, H, D)."""
+        C = qc.shape[1]
+
+        def scores(kc, kvpos):
+            s = jnp.einsum("bchd,bthd->bhct", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qpos[:, None] >= kvpos[None, :]          # (C, Tc)
+                s = jnp.where(mask[None, None], s, -1e30)
+            return s
+
+        if Skv <= kv_chunk or Skv % kv_chunk != 0:
+            s = scores(k, kv_positions)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            l = jnp.sum(p, axis=-1)
+            acc = jnp.einsum("bhct,bthd->bhcd", p, v,
+                             preferred_element_type=jnp.float32)
+        else:
+            nk = Skv // kv_chunk
+            ks = k.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+            vs = v.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+            kvps = kv_positions.reshape(nk, kv_chunk)
+
+            def body(carry, xs):
+                m, l, acc = carry
+                kc, vc, kvpos = xs
+                s = scores(kc, kvpos)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha[..., 0] + jnp.sum(p, axis=-1)
+                acc = acc * alpha + jnp.einsum(
+                    "bhct,bthd->bhcd", p, vc,
+                    preferred_element_type=jnp.float32)
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((B, H, C, 1), -1e30, jnp.float32)
+            l0 = jnp.zeros((B, H, C), jnp.float32)
+            a0 = jnp.zeros((B, H, C, D), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kvps))
+
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,C,H,D)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return attend_chunk(q, q_positions)
+
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(n, q_chunk)
+
+    def body(_, xs):
+        qc, qpos = xs
+        return None, attend_chunk(qc, qpos)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
+              *, positions: jax.Array, causal: bool = True,
+              kv_cache: dict | None = None, cache_pos=None,
+              kv_override: tuple | None = None, q_chunk: int = 1024,
+              use_rope: bool = True):
+    """GQA attention block (qkv proj + core).  ``cfg`` shards the
+    (batch, seq, heads) output of the core (the searched config).
+
+    kv_cache: {"k": (B, Smax, KH, D), "v": ...} — decode path updates it at
+    ``cache_pos`` and attends over the full cache.
+    kv_override: (k, v, kv_positions) for cross-attention.
+    Returns (attn_out_(B,S,H,D), new_cache).
+    """
+    B, S, _ = x.shape
+    KH, G, hd = arch.n_kv_heads, arch.n_heads // arch.n_kv_heads, arch.hd
+
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if kv_override is None:
+        k = jnp.einsum("bsd,dhe->bshe", x, p["wk"])
+        v = jnp.einsum("bsd,dhe->bshe", x, p["wv"])
+        if "bk" in p:
+            k, v = k + p["bk"], v + p["bv"]
+        if "k_norm" in p:
+            k = rms_norm(k, p["k_norm"])
+        if use_rope:
+            k = rope(k, positions, arch.rope_theta)
+        kv_positions = positions
+    else:
+        k, v, kv_positions = kv_override
+    if "q_norm" in p:
+        q = rms_norm(q, p["q_norm"])
+    if use_rope:
+        q = rope(q, positions, arch.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        new_cache = {"k": ck, "v": cv}
+        k, v = ck, cv
+        kv_positions = jnp.arange(ck.shape[1])
+        # mask out beyond-cache positions via causality vs current position
+        causal = True
+
+    # GQA expansion to full head count: a broadcast GSPMD fuses with the
+    # per-shard slice, keeping the heads dim shardable at full TP degree.
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+
+    # constrain q/k/v per the searched config: (batch, seq, heads)
+    q = constrain(q, cfg, ("batch", "seq", "heads", None))
+    k = constrain(k, cfg, ("batch", "seq", "heads", None))
+    v = constrain(v, cfg, ("batch", "seq", "heads", None))
+
+    o = _mha_core(q, k, v, causal=causal, q_positions=positions,
+                  kv_positions=kv_positions, q_chunk=q_chunk)
+    o = constrain(o, cfg, ("batch", "seq", "heads", None))
+    return o, new_cache
+
+
+def attention_out(p: dict, attn: jax.Array, cfg: LayerConfig) -> jax.Array:
+    """o-proj: (B,S,H,D) -> (B,S,d_model); cfg shards (batch,seq,d_model)."""
+    y = jnp.einsum("bshe,hed->bsd", attn, p["wo"])
+    return constrain(y, cfg, ("batch", "seq", "d_model"))
+
+
+# --------------------------------------------------------------------------- #
+# dense SwiGLU MLP (two graph nodes: mlp_in, mlp_out)
+# --------------------------------------------------------------------------- #
+def init_mlp(key, arch, dtype, d_ff: int | None = None):
+    d = arch.d_model
+    f = d_ff or arch.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(ks[0], (d, f), dtype, fan_in=d),
+        "wg": dense_init(ks[1], (d, f), dtype, fan_in=d),
+        "wo": dense_init(ks[2], (f, d), dtype, fan_in=f),
+    }
+
+
+def mlp(p: dict, x: jax.Array, cfg_in: LayerConfig,
+        cfg_out: LayerConfig) -> jax.Array:
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"])
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, cfg_in, ("batch", "seq", "d_ff"))
+    y = jnp.einsum("bsf,fd->bsd", h, p["wo"])
+    return constrain(y, cfg_out, ("batch", "seq", "d_model"))
+
+
+# --------------------------------------------------------------------------- #
+# embedding / head
+# --------------------------------------------------------------------------- #
+def init_embed(key, arch, dtype):
+    return {"table": embed_init(key, (arch.vocab, arch.d_model), dtype)}
+
+
+def embed(p: dict, tokens: jax.Array, cfg: LayerConfig) -> jax.Array:
+    y = jnp.take(p["table"], tokens, axis=0)
+    return constrain(y, cfg, ("batch", "seq", "d_model"))
+
+
+def init_lm_head(key, arch, dtype):
+    if arch.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, (arch.d_model, arch.vocab), dtype,
+                            fan_in=arch.d_model)}
+
+
+def lm_head(p: dict, x: jax.Array, embed_p: dict, arch,
+            cfg: LayerConfig) -> jax.Array:
+    w = embed_p["table"].T if arch.tie_embeddings else p["w"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    return constrain(logits, cfg, ("batch", "seq", "vocab"))

@@ -1,0 +1,115 @@
+"""Top-k MoE with capacity-based scatter dispatch (GShard-style).
+
+Fixed-shape dispatch suitable for SPMD: tokens are scattered into per-expert
+buffers of capacity ``C = ceil(cap_factor * T * k / E)``; overflow tokens are
+dropped (contribute zero — residual carries them).  Under an expert-sharded
+config the buffers live on the expert axis and XLA inserts the
+dispatch/combine all-to-alls the cost model priced.
+
+Also computes the standard load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LayerConfig
+from repro.core.sharding import constrain
+
+from .layers import dense_init
+
+
+def init_moe(key, arch, dtype):
+    d = arch.d_model
+    f = arch.moe_d_ff or arch.d_ff
+    e = arch.n_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": dense_init(ks[0], (d, e), jnp.float32, fan_in=d),
+        "wi": dense_init(ks[1], (e, d, f), dtype, fan_in=d),
+        "wg": dense_init(ks[2], (e, d, f), dtype, fan_in=d),
+        "wo": dense_init(ks[3], (e, f, d), dtype, fan_in=f),
+    }
+
+
+def capacity(tokens: int, arch) -> int:
+    c = int(arch.capacity_factor * tokens * arch.top_k / arch.n_experts)
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def moe_ffn(p: dict, x: jax.Array, arch, cfg: LayerConfig):
+    """x: (B, S, D) -> (y: (B, S, D), aux_loss: scalar).
+
+    **Grouped dispatch**: tokens are routed *within their batch row* (the
+    GShard "group" = the data shard), so the scatter/gather stay local to
+    each data-parallel shard and the only cross-device traffic is the
+    expert all-to-all XLA inserts between the batch-sharded buffers and the
+    expert-sharded FFN einsums — exactly what the cost model priced.
+
+    ``cfg`` may shard: batch/seq (token dims), expert (EP), d_ff (TP inside
+    experts).
+    """
+    B, S, D = x.shape
+    E, K = arch.n_experts, arch.top_k
+    C = capacity(S, arch)                                      # per group
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, K)            # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+    gate_vals = gate_vals.astype(x.dtype)   # keep the combine chain bf16
+
+    # position of each (token, k) assignment within its expert, per group
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (B, S, K, E)
+    flat = onehot.reshape(B, S * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # (B, S*K, E)
+    pos_in_expert = jnp.sum(pos * flat, axis=-1)               # (B, S*K)
+    eidx = expert_idx.reshape(B, S * K)
+    keep = pos_in_expert < C
+
+    # scatter tokens into per-group (E*C, D) buffers (local to the shard).
+    # Dispatch loops over the K routing choices so the (B, S, D)-sized
+    # scatter source is never replicated K times (K=8 for olmoe), and every
+    # tensor touching the scatter/gather is explicitly batch-constrained —
+    # without that, GSPMD gives up on partitioning the scatter and
+    # replicates the cotangents (observed: 4 GiB full-batch f32 buffers in
+    # the 398B dry-run bwd).
+    lin = jnp.where(keep, eidx * C + pos_in_expert, E * C)     # drop slot
+    lin = constrain(lin, cfg, ("batch", None)).reshape(B, S, K)
+    keep_k = keep.reshape(B, S, K)
+    b_idx = jnp.arange(B)[:, None]
+    buf = jnp.zeros((B, E * C + 1, D), x.dtype)
+    for k in range(K):
+        src = x * keep_k[..., k, None].astype(x.dtype)
+        src = constrain(src, cfg, ("batch", "seq", "d_model"))
+        buf = buf.at[b_idx, lin[:, :, k]].add(src)
+    buf = constrain(buf, cfg, ("batch", None, "d_model"))
+    buf = buf[:, :-1].reshape(B, E, C, D)
+    buf = constrain(buf, cfg, ("batch", "expert", None, "d_model"))
+
+    # expert FFN (SwiGLU)
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"])
+    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
+    h = jax.nn.silu(g) * h
+    h = constrain(h, cfg, ("batch", "expert", None, "d_ff"))
+    out = jnp.einsum("becf,efd->becd", h, p["wo"])
+    out = constrain(out, cfg, ("batch", "expert", None, "d_model"))
+
+    # combine: gather back (local), weight by gate values, K at a time
+    out = out.reshape(B, E * C, D)
+    out = constrain(out, cfg, ("batch", None, "d_model"))
+    gates_k = (keep_k * gate_vals.reshape(B, S, K)).astype(x.dtype)
+    y = jnp.zeros((B, S, D), x.dtype)
+    for k in range(K):
+        g_k = out[b_idx, jnp.minimum(lin[:, :, k], E * C - 1)]
+        g_k = constrain(g_k, cfg, ("batch", "seq", "d_model"))
+        y = y + g_k * gates_k[..., k, None]
+    y = constrain(y, cfg, ("batch", "seq", "d_model"))
+
+    # load-balancing aux loss (Switch/GShard)
+    frac_tokens = jnp.mean(onehot.sum(axis=2).astype(jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs) / K
+    return y, aux

@@ -1,0 +1,255 @@
+"""Recurrent sequence mixers: RWKV6 (Finch) time/channel-mix and Mamba-1
+selective SSM (for Jamba's 7:1 interleave).
+
+Training uses a chunk-checkpointed time scan: the outer scan carries the
+recurrent state across chunks (saved for bwd), the inner per-step scan is
+``jax.checkpoint``-ed and recomputed in bwd — memory O(S/chunk · state)
+instead of O(S · state), the standard treatment for selective-scan layers
+(real Mamba does the same inside its CUDA kernel; our Pallas kernel mirrors
+it on TPU).
+
+The sequence dim is *never* sharded here (the recurrence is sequential);
+``parallel_dims`` in graph_export excludes ``seq`` for these kinds, so no
+searched config can demand it.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import LayerConfig
+from repro.core.sharding import constrain
+
+from .layers import dense_init
+
+
+# --------------------------------------------------------------------------- #
+# chunk-checkpointed time scan
+# --------------------------------------------------------------------------- #
+def remat_time_scan(step, carry, xs, chunk: int = 64):
+    """``step(carry, x_t) -> (carry, y_t)`` scanned over time axis 0 of the
+    leaves of ``xs``; the inner per-chunk scan is rematerialized."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S % chunk != 0 or S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys
+
+
+def token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
+    """RWKV token shift: x[t-1] (prev carries state across chunks/steps)."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, :1])
+    else:
+        prev = prev[:, None, :].astype(x.dtype)
+    return jnp.concatenate([prev, x[:, :-1]], axis=1)
+
+
+# --------------------------------------------------------------------------- #
+# RWKV6 time mix (WKV6 recurrence, data-dependent decay)
+# --------------------------------------------------------------------------- #
+def init_rwkv_tmix(key, arch, dtype):
+    d = arch.d_model
+    ks = jax.random.split(key, 8)
+    H, hs = arch.n_rwkv_heads, arch.rwkv_head_size
+    return {
+        "mu": 0.5 * jnp.ones((5, d), dtype),        # r,k,v,g,w mixing
+        "wr": dense_init(ks[0], (d, d), dtype),
+        "wk": dense_init(ks[1], (d, d), dtype),
+        "wv": dense_init(ks[2], (d, d), dtype),
+        "wg": dense_init(ks[3], (d, d), dtype),
+        "w0": jnp.full((d,), -2.0, dtype),          # decay base
+        "w_lora_a": dense_init(ks[4], (d, 64), dtype),
+        "w_lora_b": dense_init(ks[5], (64, d), dtype) * 0.1,
+        "u": dense_init(ks[6], (H, hs), dtype),     # bonus
+        "ln_x": jnp.ones((d,), dtype),
+        "wo": dense_init(ks[7], (d, d), dtype),
+    }
+
+
+def _wkv6_step(carry, xs):
+    """carry: S (B,H,hs,hs) f32; xs: (r,k,v,w,u) per step."""
+    S = carry
+    r, k, v, w, u = xs
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = w.astype(jnp.float32)
+    kv = k[..., :, None] * v[..., None, :]               # (B,H,hs,hs)
+    o = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
+    S = w[..., :, None] * S + kv
+    return S, o
+
+
+def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
+              state: dict | None = None, chunk: int = 64):
+    """x: (B,S,D) -> (y, new_state).  state: {"shift": (B,D), "wkv": (B,H,hs,hs)}."""
+    B, S, D = x.shape
+    H, hs = arch.n_rwkv_heads, arch.rwkv_head_size
+    prev = state["shift"] if state is not None else None
+    sh = token_shift(x, prev)
+    mu = p["mu"]
+    xr, xk, xv, xg, xw = (x + mu[i] * (sh - x) for i in range(5))
+
+    r = (xr @ p["wr"]).reshape(B, S, H, hs)
+    k = (xk @ p["wk"]).reshape(B, S, H, hs)
+    v = (xv @ p["wv"]).reshape(B, S, H, hs)
+    g = jax.nn.silu(xg @ p["wg"])
+    w_log = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
+    w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(B, S, H, hs)
+
+    r = constrain(r, cfg, ("batch", "seq", "heads", None))
+    k = constrain(k, cfg, ("batch", "seq", "heads", None))
+    v = constrain(v, cfg, ("batch", "seq", "heads", None))
+
+    # time-major for the scan; r/k/v stream in the activation dtype, the
+    # decay w and the state stay f32 (w^4096 compounding is precision-
+    # critical), f32 math inside the step.
+    tm = lambda a: a.transpose(1, 0, 2, 3)
+    u = p["u"].astype(jnp.float32)
+    S0 = (state["wkv"] if state is not None
+          else jnp.zeros((B, H, hs, hs), jnp.float32))
+    us = jnp.broadcast_to(u, (S,) + u.shape)  # constant per step
+    Sn, o = remat_time_scan(
+        _wkv6_step, S0, (tm(r), tm(k), tm(v), tm(w), us), chunk=chunk)
+    o = o.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+
+    # per-head group norm
+    of = o.reshape(B, S, H, hs).astype(jnp.float32)
+    of = (of - of.mean(-1, keepdims=True)) * jax.lax.rsqrt(
+        of.var(-1, keepdims=True) + 1e-5)
+    o = (of.reshape(B, S, D) * p["ln_x"].astype(jnp.float32)).astype(x.dtype)
+
+    y = (o * g) @ p["wo"]
+    y = constrain(y, cfg, ("batch", "seq", "d_model"))
+    new_state = {"shift": x[:, -1, :], "wkv": Sn}
+    return y, new_state
+
+
+def init_rwkv_cmix(key, arch, dtype):
+    d, f = arch.d_model, arch.d_ff
+    ks = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d), dtype),
+        "wk": dense_init(ks[0], (d, f), dtype),
+        "wv": dense_init(ks[1], (f, d), dtype, fan_in=f),
+        "wr": dense_init(ks[2], (d, d), dtype),
+    }
+
+
+def rwkv_cmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
+              state: dict | None = None):
+    prev = state["shift"] if state is not None else None
+    sh = token_shift(x, prev)
+    mu = p["mu"]
+    xk = x + mu[0] * (sh - x)
+    xr = x + mu[1] * (sh - x)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"]))
+    k = constrain(k, cfg, ("batch", "seq", "d_ff"))
+    v = k @ p["wv"]
+    y = jax.nn.sigmoid(xr @ p["wr"]) * v
+    y = constrain(y, cfg, ("batch", "seq", "d_model"))
+    return y, {"shift": x[:, -1, :]}
+
+
+# --------------------------------------------------------------------------- #
+# Mamba-1 selective SSM
+# --------------------------------------------------------------------------- #
+def init_mamba(key, arch, dtype):
+    d, di, N = arch.d_model, arch.d_inner, arch.ssm_state
+    rank = max(1, math.ceil(d / 16))
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype),
+        "conv_w": dense_init(ks[1], (arch.ssm_conv, di), dtype,
+                             fan_in=arch.ssm_conv),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, rank + 2 * N), dtype, fan_in=di),
+        "dt_proj": dense_init(ks[3], (rank, di), dtype, fan_in=rank),
+        "dt_bias": jnp.full((di,), -4.6, dtype),     # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype, fan_in=di),
+    }
+
+
+def _causal_conv1d(x, w, b, state=None):
+    """x: (B,S,di); w: (k,di) depthwise; state: (B,k-1,di) carried."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
+    return out, xp[:, -(k - 1):, :]
+
+
+def _make_mamba_step(A, Dskip):
+    """A: (di, N); Dskip: (di,).  The (B, di, N) discretized terms are
+    formed per step inside the scan — materializing them for the whole
+    sequence is O(S·di·N) and exactly what the fused selective-scan kernel
+    avoids."""
+
+    def step(h, xs):
+        dt, Bm, Cm, x1 = xs          # (B,di), (B,N), (B,N), (B,di)
+        dt = dt.astype(jnp.float32)  # xs stream in bf16; state math in f32
+        Bm = Bm.astype(jnp.float32)
+        Cm = Cm.astype(jnp.float32)
+        x1 = x1.astype(jnp.float32)
+        dtA = dt[..., None] * A      # (B, di, N)
+        h = jnp.exp(dtA) * h + (dt * x1)[..., None] * Bm[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, Cm) + Dskip * x1
+        return h, y
+
+    return step
+
+
+def mamba_mix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
+              state: dict | None = None, chunk: int = 64):
+    """x: (B,S,D) -> (y, new_state).
+    state: {"conv": (B,k-1,di), "ssm": (B,di,N)}."""
+    B, S, D = x.shape
+    di, N = arch.d_inner, arch.ssm_state
+    rank = p["dt_proj"].shape[0]
+
+    xz = x @ p["in_proj"]
+    x1, z = jnp.split(xz, 2, axis=-1)
+    x1 = constrain(x1, cfg, ("batch", "seq", "d_model"))
+    conv_state = state["conv"] if state is not None else None
+    x1, new_conv = _causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state)
+    x1 = jax.nn.silu(x1)
+
+    dbl = x1 @ p["x_proj"]
+    dt, Bm, Cm = jnp.split(dbl, [rank, rank + N], axis=-1)
+    dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])                                  # (di, N)
+
+    # scan inputs stream in the activation dtype (bf16 on TPU); the state
+    # recurrence itself runs in f32 inside the step.
+    tm = lambda a: jnp.moveaxis(a, 1, 0)
+    h0 = (state["ssm"] if state is not None
+          else jnp.zeros((B, di, N), jnp.float32))
+    step = _make_mamba_step(A, p["D"])
+    hN, y = remat_time_scan(
+        step, h0, (tm(dt.astype(x.dtype)), tm(Bm), tm(Cm), tm(x1)),
+        chunk=chunk)
+    y = jnp.moveaxis(y, 0, 1).astype(x.dtype)                 # (B,S,di)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    out = constrain(out, cfg, ("batch", "seq", "d_model"))
+    return out, {"conv": new_conv, "ssm": hN}

@@ -1,0 +1,11 @@
+from .adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+    zero1_state_pspecs,
+)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "cosine_schedule",
+           "global_norm", "zero1_state_pspecs"]

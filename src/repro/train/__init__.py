@@ -1,0 +1,12 @@
+from .shardings import (
+    batch_pspecs,
+    cache_pspecs,
+    dominant_unit_plan,
+    param_pspecs,
+    to_shardings,
+)
+from .step import TrainConfig, make_serve_fns, make_train_step
+
+__all__ = ["TrainConfig", "batch_pspecs", "cache_pspecs",
+           "dominant_unit_plan", "make_serve_fns", "make_train_step",
+           "param_pspecs", "to_shardings"]

@@ -1,0 +1,155 @@
+"""Cost-model invariants (hypothesis property tests)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AxisSpec,
+    CostModel,
+    ICI_BW,
+    LayerConfig,
+    LayerNode,
+    MeshSpec,
+    POD_BW,
+    TensorSpec,
+    enumerate_configs,
+    multi_pod_mesh_spec,
+    single_pod_mesh_spec,
+)
+
+MESH = multi_pod_mesh_spec()
+CM = CostModel(MESH, training=True)
+
+dims_st = st.sampled_from([
+    ("batch",), ("batch", "seq"), ("batch", "seq", "heads"),
+    ("batch", "seq", "d_ff"), ("batch", "seq", "expert", "d_ff"),
+])
+
+
+@st.composite
+def config_pair(draw):
+    dims = draw(dims_st)
+    cfgs = enumerate_configs(MESH, dims)
+    i = draw(st.integers(0, len(cfgs) - 1))
+    j = draw(st.integers(0, len(cfgs) - 1))
+    return cfgs[i], cfgs[j]
+
+
+def _node(dims=("batch", "seq", "d_model")):
+    t = TensorSpec.make(batch=32, seq=128, d_model=256)
+    return LayerNode("n", "mlp_out", t, flops=1e12, param_bytes=1e8,
+                     act_bytes=1e9, parallel_dims=dims)
+
+
+def _edge():
+    from repro.core.graph import Edge
+    return Edge(0, "a", "b", TensorSpec.make(batch=32, seq=128, d_model=256))
+
+
+@settings(max_examples=200, deadline=None)
+@given(pair=config_pair())
+def test_reshard_nonnegative_and_zero_on_identity(pair):
+    ci, cj = pair
+    e = _edge()
+    assert CM.t_x(e, ci, cj) >= 0.0
+    assert CM.t_x(e, ci, ci) == 0.0
+
+
+@settings(max_examples=100, deadline=None)
+@given(pair=config_pair())
+def test_reshard_free_when_dst_refines_replication(pair):
+    """Moving from replicated to any sharding is a local slice: free."""
+    _, cj = pair
+    e = _edge()
+    assert CM.t_x(e, LayerConfig.REPLICATED, cj) == 0.0
+
+
+def test_collective_formulas():
+    mesh = single_pod_mesh_spec(4, 2)
+    b = 1e9
+    ar = mesh.all_reduce(b, ("data",))
+    rs = mesh.reduce_scatter(b, ("data",))
+    ag = mesh.all_gather(b / 4, ("data",))
+    # all-reduce == reduce-scatter + all-gather (ring identity)
+    assert ar.time == pytest.approx(rs.time + ag.time)
+    assert ar.bytes == pytest.approx(2 * (4 - 1) / 4 * b)
+    # hierarchical over both axes costs more than one axis
+    ar2 = mesh.all_reduce(b, ("data", "model"))
+    assert ar2.time > ar.time
+
+
+def test_pod_axis_is_slower():
+    mesh = multi_pod_mesh_spec()
+    b = 1e9
+    t_pod = mesh.all_reduce(b, ("pod",)).time
+    t_data = mesh.all_reduce(b, ("data",)).time
+    # pod: 2 chips at POD_BW; data: 16 chips at ICI_BW
+    assert t_pod == pytest.approx(2 * (1 / 2) * b / POD_BW)
+    assert t_pod > 2 * (15 / 16) * b / ICI_BW * 0.3
+
+
+def test_tc_monotone_in_pure_compute_degree():
+    """For a compute-bound layer without internal comm, more devices is
+    never slower."""
+    node = _node(dims=("batch", "seq"))
+    cfgs = enumerate_configs(MESH, ("batch", "seq"))
+    best_small = CM.t_c(node, LayerConfig.REPLICATED)
+    for c in cfgs:
+        assert CM.t_c(node, c) <= best_small * (1 + 1e-12)
+
+
+def test_ts_zero_for_inference_and_paramfree():
+    cm_inf = CostModel(MESH, training=False)
+    node = _node()
+    cfg = LayerConfig.make(batch=("data",))
+    assert cm_inf.t_s(node, cfg) == 0.0
+    node_free = LayerNode("f", "residual", node.out, flops=1.0,
+                          param_bytes=0.0)
+    assert CM.t_s(node_free, cfg) == 0.0
+
+
+def test_ts_decreases_with_param_sharding():
+    node = LayerNode("m", "mlp_in", TensorSpec.make(batch=8, seq=8, d_ff=512),
+                     flops=1.0, param_bytes=1e9,
+                     parallel_dims=("batch", "seq", "d_ff"))
+    t_dp = CM.t_s(node, LayerConfig.make(batch=("data",)))
+    t_tp = CM.t_s(node, LayerConfig.make(batch=("data",), d_ff=("model",)))
+    assert t_tp < t_dp
+
+
+def test_fsdp_sync_cheaper_but_gather_charged():
+    node = LayerNode("m", "mlp_in", TensorSpec.make(batch=8, seq=8, d_ff=512),
+                     flops=1.0, param_bytes=1e9, act_bytes=1e6,
+                     parallel_dims=("batch", "seq", "d_ff"))
+    cfg = LayerConfig.make(batch=("data",))
+    fcfg = cfg.with_fsdp()
+    assert CM.t_s(node, fcfg) < CM.t_s(node, cfg)      # RS < AR
+    assert CM.t_c(node, fcfg) > CM.t_c(node, cfg)      # + all-gather
+    # memory: FSDP strictly smaller
+    from repro.core.cost_model import node_device_bytes
+    assert node_device_bytes(node, fcfg, MESH, True) < \
+        node_device_bytes(node, cfg, MESH, True)
+
+
+def test_config_enumeration_validity():
+    cfgs = enumerate_configs(MESH, ("batch", "seq", "heads"))
+    assert LayerConfig.REPLICATED in cfgs
+    for c in cfgs:
+        assert c.is_valid(MESH)
+        axes = c.axes_used()
+        assert len(set(axes)) == len(axes)
+    # (dims+1)^axes upper bound
+    assert len(cfgs) <= 4 ** 3
+
+
+def test_degree_accounting():
+    cfg = LayerConfig.make(batch=("pod", "data"), heads=("model",))
+    assert cfg.degree(MESH) == 2 * 16 * 16
+    assert cfg.degree(MESH, dims=("batch",)) == 32
+    assert cfg.param_axes() == ("model",)
+    assert set(cfg.replicating_axes(MESH)) == {"pod", "data"}
+    assert cfg.param_store_degree(MESH) == 16
+    assert cfg.with_fsdp().param_store_degree(MESH) == 16 * 32

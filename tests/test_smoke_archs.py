@@ -1,0 +1,145 @@
+"""Per-architecture smoke tests (assignment requirement): a REDUCED config
+of the same family runs one forward/train step on CPU; output shapes and
+finiteness asserted.  Full configs are exercised only via the dry-run."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import lm, encdec, model_module
+from repro.models.arch import SHAPES
+
+
+@pytest.mark.parametrize("name", C.ALL_ARCHS)
+def test_full_config_matches_assignment(name):
+    arch = C.get(name)
+    spec = {
+        "phi3_5_moe_42b": (32, 4096, 32, 8, 6400, 32064, 16, 2),
+        "olmoe_1b_7b": (16, 2048, 16, 16, 1024, 50304, 64, 8),
+        "rwkv6_1b6": (24, 2048, None, None, 7168, 65536, 0, 0),
+        "llama3_2_1b": (16, 2048, 32, 8, 8192, 128256, 0, 0),
+        "olmo_1b": (16, 2048, 16, 16, 8192, 50304, 0, 0),
+        "qwen2_5_3b": (36, 2048, 16, 2, 11008, 151936, 0, 0),
+        "granite_3_2b": (40, 2048, 32, 8, 8192, 49155, 0, 0),
+        "jamba_1_5_large": (72, 8192, 64, 8, 24576, 65536, 16, 2),
+        "internvl2_76b": (80, 8192, 64, 8, 28672, 128256, 0, 0),
+        "seamless_m4t_v2": (24, 1024, 16, 16, 8192, 256206, 0, 0),
+    }[name]
+    L_, d, h, kv, ff, v, e, k = spec
+    assert arch.n_layers == L_
+    assert arch.d_model == d
+    if h is not None:
+        assert arch.n_heads == h and arch.n_kv_heads == kv
+    assert arch.d_ff == ff and arch.vocab == v
+    assert arch.n_experts == e and arch.top_k == k
+
+
+@pytest.mark.parametrize("name", C.ALL_ARCHS)
+def test_smoke_forward_and_train_step(name):
+    arch = C.reduced(name)
+    rng = jax.random.PRNGKey(0)
+    B, S = 2, 32
+    if arch.enc_layers:
+        params = encdec.init_encdec(rng, arch, jnp.float32)
+        batch = {"frames": jax.random.normal(rng, (B, 16, arch.d_model)),
+                 "tokens": jax.random.randint(rng, (B, S), 0, arch.vocab)}
+        logits, _ = jax.jit(
+            lambda p, b: encdec.forward(p, b, arch, remat=False))(params, batch)
+        assert logits.shape == (B, S, arch.vocab)
+        loss, metrics = jax.jit(
+            lambda p, b: encdec.loss_fn(p, b, arch))(params, batch)
+    else:
+        params = lm.init_lm(rng, arch, jnp.float32)
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, arch.vocab)}
+        S_total = S
+        if arch.frontend:
+            batch["frontend"] = jax.random.normal(
+                rng, (B, arch.frontend_tokens, arch.d_model))
+            S_total = S + arch.frontend_tokens
+        logits, _ = jax.jit(
+            lambda p, b: lm.forward(p, b, arch, remat=False))(params, batch)
+        assert logits.shape == (B, S_total, arch.vocab)
+        loss, metrics = jax.jit(
+            lambda p, b: lm.loss_fn(p, b, arch, time_chunk=16,
+                                    loss_chunk=16))(params, batch)
+    assert np.isfinite(float(loss))
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    # one full optimizer step
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+    if arch.enc_layers:
+        grad_fn = jax.grad(lambda p: encdec.loss_fn(p, batch, arch)[0])
+    else:
+        grad_fn = jax.grad(lambda p: lm.loss_fn(p, batch, arch)[0])
+    grads = jax.jit(grad_fn)(params)
+    new_params, _, om = adamw_update(params, grads, adamw_init(params),
+                                     AdamWConfig())
+    assert np.isfinite(float(om["grad_norm"]))
+    # params actually moved
+    delta = max(float(jnp.max(jnp.abs(a - b)))
+                for a, b in zip(jax.tree.leaves(params),
+                                jax.tree.leaves(new_params)))
+    assert delta > 0
+
+
+@pytest.mark.parametrize("name", ["llama3_2_1b", "rwkv6_1b6",
+                                  "jamba_1_5_large", "seamless_m4t_v2"])
+def test_smoke_decode_consistency(name):
+    """prefill + decode_step equals teacher forcing (high-capacity MoE so
+    no load-dependent drops)."""
+    arch = C.reduced(name)
+    if arch.n_experts:
+        arch = dataclasses.replace(arch, capacity_factor=8.0)
+    rng = jax.random.PRNGKey(0)
+    B, S = 2, 16
+    mod = model_module(arch)
+    if arch.enc_layers:
+        params = encdec.init_encdec(rng, arch, jnp.float32)
+        batch = {"frames": jax.random.normal(rng, (B, 8, arch.d_model)),
+                 "tokens": jax.random.randint(rng, (B, S), 0, arch.vocab)}
+        cache = encdec.init_cache(arch, B, S + 2, jnp.float32, enc_len=8)
+        tf, _ = encdec.forward(params, batch, arch, remat=False)
+        lp, cache = encdec.prefill(params, batch, cache, arch)
+    else:
+        params = lm.init_lm(rng, arch, jnp.float32)
+        batch = {"tokens": jax.random.randint(rng, (B, S), 0, arch.vocab)}
+        cache = lm.init_cache(arch, B, S + 2, jnp.float32)
+        tf, _ = lm.forward(params, batch, arch, remat=False)
+        lp, cache = lm.prefill(params, batch, cache, arch)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(tf[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_match_billing():
+    """ArchConfig.param_count must track actual init param counts within
+    ~15% (embedding/norm bookkeeping differs slightly)."""
+    for name in ("llama3_2_1b", "olmoe_1b_7b", "rwkv6_1b6"):
+        arch = C.reduced(name)
+        mod = model_module(arch)
+        params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+        actual = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+        billed = arch.param_count()["total"]
+        assert abs(actual - billed) / actual < 0.2, (name, actual, billed)
+
+
+def test_assigned_param_budgets():
+    """Full configs hit their published parameter budgets."""
+    assert abs(C.get("phi3_5_moe_42b").param_count()["total"] - 42e9) < 4e9
+    assert abs(C.get("olmoe_1b_7b").param_count()["total"] - 7e9) < 1e9
+    assert abs(C.get("jamba_1_5_large").param_count()["total"] - 398e9) < 40e9
+    assert abs(C.get("internvl2_76b").param_count()["total"] - 70e9) < 8e9
+    assert abs(C.get("rwkv6_1b6").param_count()["total"] - 1.6e9) < 0.4e9
+    assert abs(C.get("phi3_5_moe_42b").active_param_count() - 6.6e9) < 1e9
+
+
+def test_long_context_skips():
+    """long_500k runs exactly for the sub-quadratic archs."""
+    runs = {n for n in C.ALL_ARCHS
+            if C.get(n).supports_shape(SHAPES["long_500k"])}
+    assert runs == {"rwkv6_1b6", "jamba_1_5_large"}
+    for n in C.ALL_ARCHS:
+        assert C.get(n).supports_shape(SHAPES["train_4k"])
+        assert C.get(n).supports_shape(SHAPES["decode_32k"])
