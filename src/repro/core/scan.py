@@ -1,0 +1,26 @@
+"""Shared scan utilities (importable from both models and kernels)."""
+
+from __future__ import annotations
+
+import jax
+
+
+def remat_time_scan(step, carry, xs, chunk: int = 64):
+    """``step(carry, x_t) -> (carry, y_t)`` scanned over time axis 0 of the
+    leaves of ``xs``; the inner per-chunk scan is rematerialized
+    (``jax.checkpoint``) — bwd memory O(T/chunk · state) instead of
+    O(T · state), the standard treatment for selective-scan layers."""
+    S = jax.tree.leaves(xs)[0].shape[0]
+    if S % chunk != 0 or S <= chunk:
+        return jax.lax.scan(step, carry, xs)
+    n = S // chunk
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
+
+    @jax.checkpoint
+    def chunk_body(c, xc):
+        return jax.lax.scan(step, c, xc)
+
+    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys)
+    return carry, ys

@@ -1,3 +1,12 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Compute hot-spot kernels behind a backend-portable dispatch registry.
+
+``dispatch`` is the registry (selection by platform/dtype/shape, env and
+context overrides, Pallas block-size autotune cache); ``ops`` holds the
+jit'd public entry points; ``ref`` the pure-jnp oracles; the remaining
+modules register the Pallas-TPU / Pallas-interpret / chunked-XLA
+implementations.  Model code calls ``dispatch.call``/``ops.*`` — never a
+kernel module directly — so a JAX rename or a new platform is absorbed
+inside this package.
+"""
+
+from . import dispatch  # noqa: F401  (registry; impls register lazily)

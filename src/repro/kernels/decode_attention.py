@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
+from . import dispatch
+
 NEG_INF = -1e30
 
 
@@ -99,7 +103,52 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             pltpu.VMEM((G, 1), jnp.float32),   # l
             pltpu.VMEM((G, D), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(kv_len, q, k, v)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: "pallas" (native TPU) and "interpret" backends
+# --------------------------------------------------------------------------- #
+_PREF_K = (1024, 512, 256, 128, 64, 32, 16, 8)
+
+
+def _block_cands(k, block_k):
+    T = k.shape[2]
+    return ([min(block_k, T)] if block_k
+            else dispatch.block_candidates(T, _PREF_K))
+
+
+def _supports(q, k, v, kv_len, *, block_k=None):
+    if k.shape != v.shape or q.shape[1] != k.shape[1]:
+        return False
+    return k.shape[2] % _block_cands(k, block_k)[0] == 0
+
+
+def _supports_native(q, k, v, kv_len, *, block_k=None):
+    # Mosaic needs the (G, block_k) score tile lane axis 128-aligned;
+    # unaligned cache lengths fall back to the ref backend.
+    return (_supports(q, k, v, kv_len, block_k=block_k)
+            and _block_cands(k, block_k)[0] % 128 == 0)
+
+
+def _via_pallas(q, k, v, kv_len, *, block_k=None, interpret=False):
+    bks = _block_cands(k, block_k)
+    bk, = dispatch.tuned_blocks(
+        "decode_attention",
+        (q.shape, k.shape, str(q.dtype), interpret, block_k),
+        [(b,) for b in bks[:4]],
+        bench=lambda b: decode_attention(q, k, v, kv_len, block_k=b,
+                                         interpret=interpret),
+        args=(q, k, v, kv_len))
+    return decode_attention(q, k, v, kv_len, block_k=bk, interpret=interpret)
+
+
+dispatch.register("decode_attention", "pallas", platforms=("tpu",),
+                  priority=100, supports=_supports_native, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=False))
+dispatch.register("decode_attention", "interpret",
+                  priority=20, supports=_supports, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=True))

@@ -1,0 +1,304 @@
+"""Backend-portable kernel dispatch.
+
+Every compute hot-spot ("op") registers multiple implementations — native
+Pallas-TPU, Pallas-interpret, chunked-XLA, pure-jnp reference — and call
+sites ask the *registry* for the op instead of importing a kernel module.
+Selection is by platform / dtype / shape via per-impl ``supports``
+predicates and priorities, so:
+
+* a JAX rename breaks one adapter, not every consumer;
+* CPU-only hosts transparently get the reference/XLA path (Pallas TPU
+  kernels cannot lower to the CPU backend);
+* TPU hosts get the tuned native kernel with block sizes from a small
+  autotune cache.
+
+Overrides, strongest first:
+  1. ``backend=`` argument to :func:`call`;
+  2. the :func:`force_backend` context (used by train/serve drivers);
+  3. ``REPRO_KERNEL_BACKEND_<OP>`` env var (op name upper-cased);
+  4. ``REPRO_KERNEL_BACKEND`` env var;
+  5. automatic selection (highest-priority impl whose platform matches and
+     whose ``supports`` predicate accepts the arguments).
+
+Ops registered by the sibling modules (canonical layouts/signatures):
+  flash_attention(q, k, v, *, causal, block_q, block_k)
+      q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D)
+  decode_attention(q, k, v, kv_len, *, block_k)
+      q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)
+  wkv6(r, k, v, w, u, *, chunk, initial_state, return_state)
+      r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N) [, (B, H, N, N)]
+"""
+
+from __future__ import annotations
+
+import contextlib
+import logging
+import os
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import jax
+
+from repro import compat
+
+log = logging.getLogger(__name__)
+
+ENV_GLOBAL = "REPRO_KERNEL_BACKEND"
+ENV_AUTOTUNE = "REPRO_KERNEL_AUTOTUNE"
+
+
+@dataclass(frozen=True)
+class Impl:
+    op: str
+    backend: str                      # "pallas" | "interpret" | "xla" | "ref"
+    fn: Callable[..., Any]
+    platforms: tuple[str, ...] = ("*",)   # eligible jax backends; "*" = any
+    priority: int = 0                     # higher wins among eligible
+    supports: Callable[..., bool] | None = None  # hard capability gate
+    # auto_gate is a *preference*, not a capability: consulted only
+    # during automatic selection (e.g. "reference path only below this
+    # size").  An explicit backend= / env override bypasses it.
+    auto_gate: Callable[..., bool] | None = None
+    # False for impls that lower to an opaque custom call (pallas_call)
+    # with no SPMD partitioning rule: under a multi-device mesh GSPMD
+    # would replicate their operands (all-gathering full q/k/v), so
+    # auto-selection skips them there; an explicit backend= still wins.
+    spmd_safe: bool = True
+
+    def eligible(self, platform: str, args, kwargs, *,
+                 auto: bool = True) -> bool:
+        if "*" not in self.platforms and platform not in self.platforms:
+            return False
+        gates = [self.supports] + ([self.auto_gate] if auto else [])
+        for gate in gates:
+            if gate is None:
+                continue
+            try:
+                if not gate(*args, **kwargs):
+                    return False
+            except Exception:  # a predicate must never take the process down
+                log.exception("predicate failed for %s/%s",
+                              self.op, self.backend)
+                return False
+        return True
+
+
+_REGISTRY: dict[str, dict[str, Impl]] = {}
+_forced = threading.local()
+_registered_builtins = False
+
+
+def register(op: str, backend: str, *, platforms: tuple[str, ...] = ("*",),
+             priority: int = 0, supports: Callable[..., bool] | None = None,
+             auto_gate: Callable[..., bool] | None = None,
+             spmd_safe: bool = True):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    ``op``.  Re-registration replaces (module reloads)."""
+
+    def deco(fn):
+        _REGISTRY.setdefault(op, {})[backend] = Impl(
+            op=op, backend=backend, fn=fn, platforms=tuple(platforms),
+            priority=priority, supports=supports, auto_gate=auto_gate,
+            spmd_safe=spmd_safe)
+        return fn
+
+    return deco
+
+
+def _ensure_builtins() -> None:
+    """Import the sibling kernel modules so their registrations run.
+    Lazy (first call) to avoid import cycles with consumers."""
+    global _registered_builtins
+    if _registered_builtins:
+        return
+    _registered_builtins = True
+    from . import ref  # noqa: F401  pure-jnp reference backends
+    from . import mha_xla  # noqa: F401  chunked-XLA attention backend
+    if compat.HAS_PALLAS:
+        from . import decode_attention  # noqa: F401
+        from . import flash_attention  # noqa: F401
+        from . import rwkv6_scan  # noqa: F401
+
+
+def backends(op: str) -> dict[str, Impl]:
+    _ensure_builtins()
+    if op not in _REGISTRY:
+        raise KeyError(f"unknown kernel op {op!r}; "
+                       f"registered: {sorted(_REGISTRY)}")
+    return _REGISTRY[op]
+
+
+@contextlib.contextmanager
+def force_backend(backend: str | None):
+    """Force every :func:`call` in this thread to ``backend`` (None =
+    no-op).  Selection happens at trace time, so wrapping a ``jax.jit``
+    *call* (or the first trace) is sufficient."""
+    prev = getattr(_forced, "backend", None)
+    _forced.backend = backend
+    try:
+        yield
+    finally:
+        _forced.backend = prev
+
+
+def _mesh_active() -> bool:
+    """True when a multi-device mesh is active (``use_mesh``): SPMD
+    partitioning is in play and spmd-unsafe impls must not auto-select."""
+    from repro.core.sharding import current_mesh
+    mesh = current_mesh()
+    return mesh is not None and mesh.devices.size > 1
+
+
+def _override_for(op: str) -> str | None:
+    forced = getattr(_forced, "backend", None)
+    if forced:
+        return forced
+    return (os.environ.get(f"{ENV_GLOBAL}_{op.upper()}")
+            or os.environ.get(ENV_GLOBAL) or None)
+
+
+def select(op: str, *args, backend: str | None = None, **kwargs) -> Impl:
+    """Resolve the implementation that :func:`call` would run.
+
+    An explicit ``backend=`` is strict: ineligible -> ValueError.  A
+    force_backend-context / env-var override is a *preference*: an
+    unknown name still raises (typos must be loud), but a known backend
+    that cannot handle this particular call (e.g. the stateless Pallas
+    wkv6 asked for the stateful decode form) logs a warning and falls
+    through to auto-selection, so one override can steer a whole model
+    without crashing the ops it cannot cover.
+    """
+    impls = backends(op)
+    platform = compat.default_platform()
+    strict = backend is not None
+    backend = backend or _override_for(op)
+    if backend is not None:
+        if backend not in impls:
+            raise ValueError(
+                f"backend {backend!r} not registered for op {op!r} "
+                f"(have: {sorted(impls)})")
+        impl = impls[backend]
+        if impl.eligible(platform, args, kwargs, auto=False):
+            return impl
+        if strict:
+            raise ValueError(
+                f"backend {backend!r} for op {op!r} does not support "
+                f"platform={platform!r} with the given shapes/dtypes")
+        log.warning("forced backend %r cannot handle this %r call; "
+                    "auto-selecting", backend, op)
+    ranked = sorted(impls.values(), key=lambda i: -i.priority)
+    spmd = _mesh_active()
+    for impl in ranked:
+        if spmd and not impl.spmd_safe:
+            continue
+        if impl.eligible(platform, args, kwargs):
+            return impl
+    raise RuntimeError(
+        f"no eligible backend for op {op!r} on platform {platform!r}; "
+        f"registered: {sorted(impls)}")
+
+
+def call(op: str, *args, backend: str | None = None, **kwargs):
+    """Dispatch ``op`` to the selected backend implementation."""
+    return select(op, *args, backend=backend, **kwargs).fn(*args, **kwargs)
+
+
+# --------------------------------------------------------------------------- #
+# Block-size autotune cache (Pallas path)
+# --------------------------------------------------------------------------- #
+_TUNE_CACHE: dict[tuple, tuple] = {}
+_TUNE_LOCK = threading.Lock()
+
+
+def autotune_enabled() -> bool:
+    return os.environ.get(ENV_AUTOTUNE, "1") not in ("0", "false", "off")
+
+
+def clear_autotune_cache() -> None:
+    with _TUNE_LOCK:
+        _TUNE_CACHE.clear()
+
+
+def _is_concrete(args) -> bool:
+    return not any(compat.is_tracer(a) for a in jax.tree.leaves(args))
+
+
+def _time_once(fn, *args) -> float:
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn(*args))
+    return time.perf_counter() - t0
+
+
+def tuned_blocks(op: str, key: tuple, candidates: list[tuple],
+                 bench: Callable[..., Any], args: tuple) -> tuple:
+    """Pick block sizes for a Pallas kernel invocation.
+
+    ``candidates`` are already filtered for validity (divisibility); the
+    first entry is the heuristic default.  On a TPU host with concrete
+    (non-traced) inputs and autotuning enabled, each candidate is timed
+    (compile excluded via a warm-up run) and the winner cached under
+    ``(op, key)``.  Under tracing the heuristic is returned WITHOUT
+    caching — so dispatch stays usable inside ``jit`` and a later eager
+    warm-up with real arrays can still tune the same shape (tuned
+    entries then serve subsequent traces).
+    """
+    if not candidates:
+        raise ValueError(f"no valid block-size candidates for {op} {key}")
+    cache_key = (op,) + key
+    with _TUNE_LOCK:
+        if cache_key in _TUNE_CACHE:
+            return _TUNE_CACHE[cache_key]
+    choice = candidates[0]
+    if len(candidates) == 1:
+        pass                          # nothing to tune; cache the choice
+    elif not (autotune_enabled() and compat.default_platform() == "tpu"):
+        pass                          # tuning can never run: cache heuristic
+    elif not _is_concrete(args):
+        return choice                 # tracing: usable now, tunable later
+    else:
+        timings = []
+        for cand in candidates:
+            try:
+                _time_once(bench, *cand)          # compile + warm up
+                timings.append((_time_once(bench, *cand), cand))
+            except Exception:                     # candidate may not compile
+                log.debug("autotune candidate %s failed for %s",
+                          cand, op, exc_info=True)
+        if timings:
+            choice = min(timings)[1]
+            log.info("autotuned %s %s -> %s", op, key, choice)
+    with _TUNE_LOCK:
+        _TUNE_CACHE[cache_key] = choice
+    return choice
+
+
+def block_candidates(dim: int, preferred: tuple[int, ...]) -> list[int]:
+    """Block sizes (largest first) from ``preferred`` that evenly divide
+    ``dim``; always non-empty (``dim`` itself divides)."""
+    cands = [b for b in sorted(set(preferred), reverse=True)
+             if b <= dim and dim % b == 0]
+    return cands or [dim]
+
+
+def with_reference_vjp(fn: Callable, ref_fn: Callable) -> Callable:
+    """Make a forward-only kernel differentiable: forward runs ``fn``,
+    backward differentiates ``ref_fn`` (the mathematically identical
+    reference) at the saved inputs.  Standard treatment for fwd-only
+    Pallas kernels — the bwd pass re-runs in XLA, which is memory-safe
+    and works on every platform."""
+
+    @jax.custom_vjp
+    def wrapped(*args):
+        return fn(*args)
+
+    def fwd(*args):
+        return fn(*args), args
+
+    def bwd(args, g):
+        _, vjp = jax.vjp(ref_fn, *args)
+        return vjp(g)
+
+    wrapped.defvjp(fwd, bwd)
+    return wrapped

@@ -23,6 +23,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
+from . import dispatch
+
 NEG_INF = -1e30
 
 
@@ -112,7 +116,79 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pltpu.VMEM((block_q, 1), jnp.float32),   # l
             pltpu.VMEM((block_q, D), jnp.float32),   # acc
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: "pallas" (native TPU) and "interpret" backends
+# --------------------------------------------------------------------------- #
+_PREF_Q = (512, 256, 128, 64, 32, 16, 8)
+_PREF_K = (512, 256, 128, 64, 32, 16, 8)
+
+
+def _block_cands(q, k, block_q, block_k):
+    S, T = q.shape[2], k.shape[2]
+    bqs = ([min(block_q, S)] if block_q
+           else dispatch.block_candidates(S, _PREF_Q))
+    bks = ([min(block_k, T)] if block_k
+           else dispatch.block_candidates(T, _PREF_K))
+    return bqs, bks
+
+
+def _supports(q, k, v, *, causal=True, block_q=None, block_k=None):
+    B, H, S, D = q.shape
+    _, KH, T, _ = k.shape
+    if H % KH != 0 or k.shape != v.shape:
+        return False
+    bqs, bks = _block_cands(q, k, block_q, block_k)
+    return S % bqs[0] == 0 and T % bks[0] == 0
+
+
+def _supports_native(q, k, v, *, causal=True, block_q=None, block_k=None):
+    # Mosaic needs MXU-aligned score tiles: block_q on the sublane axis
+    # (x8), block_k on the lane axis (x128).  Unaligned lengths (e.g. a
+    # prime S, where the only valid block is S itself) must fall back to
+    # the xla/ref backends instead of failing TPU compilation.
+    if not _supports(q, k, v, causal=causal, block_q=block_q,
+                     block_k=block_k):
+        return False
+    bqs, bks = _block_cands(q, k, block_q, block_k)
+    return bqs[0] % 8 == 0 and bks[0] % 128 == 0
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_ready(causal, block_q, block_k, interpret):
+    """Kernel forward + chunked-XLA backward (fwd-only Pallas kernels are
+    made differentiable by differentiating the reference at the inputs)."""
+    from . import mha_xla
+    kern = functools.partial(flash_attention, causal=causal,
+                             block_q=block_q, block_k=block_k,
+                             interpret=interpret)
+    ref = functools.partial(mha_xla.flash_attention_xla, causal=causal)
+    return dispatch.with_reference_vjp(kern, ref)
+
+
+def _via_pallas(q, k, v, *, causal=True, block_q=None, block_k=None,
+                interpret=False):
+    bqs, bks = _block_cands(q, k, block_q, block_k)
+    cands = [(bq, bk) for bq in bqs[:3] for bk in bks[:3]]
+    bq, bk = dispatch.tuned_blocks(
+        "flash_attention",
+        (q.shape, k.shape, str(q.dtype), causal, interpret,
+         block_q, block_k), cands,
+        bench=lambda bq_, bk_: flash_attention(
+            q, k, v, causal=causal, block_q=bq_, block_k=bk_,
+            interpret=interpret),
+        args=(q, k, v))
+    return _grad_ready(causal, bq, bk, interpret)(q, k, v)
+
+
+dispatch.register("flash_attention", "pallas", platforms=("tpu",),
+                  priority=100, supports=_supports_native, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=False))
+dispatch.register("flash_attention", "interpret",
+                  priority=20, supports=_supports, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=True))

@@ -1,0 +1,134 @@
+"""Chunked online-softmax attention in pure XLA (the "xla" backend).
+
+This is the generic, memory-safe attention implementation: peak memory is
+O(q_chunk * kv_chunk) per (B, H) instead of O(S * T).  It lowers on every
+JAX platform, is differentiable, and supports arbitrary query/KV position
+vectors — so it backs three roles:
+
+* the ``flash_attention`` dispatch backend wherever Pallas cannot run (or
+  the reference path would materialize too large a score tensor);
+* the backward pass of the fwd-only Pallas kernels (reference VJP);
+* the ``kv_override`` / cross-attention path in ``repro.models.layers``
+  (which needs free-form positions the blocked kernels do not take).
+
+Historically this lived in ``repro.models.layers._mha_core``; it moved
+here so every attention implementation registers through
+``repro.kernels.dispatch``.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from . import dispatch
+
+NEG_INF = -1e30
+
+
+def mha_chunked(q, k, v, *, causal: bool, q_positions, kv_positions,
+                q_chunk: int = 512, kv_chunk: int = 1024):
+    """Online-softmax (flash-style) attention in pure XLA.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, H, D) — KV already expanded to the full
+    head count (GQA expansion happens in the caller as a broadcast that
+    GSPMD fuses with the per-shard slice, so the heads dim stays shardable
+    at full TP degree; reshaping H -> (KH, G) instead makes the dim
+    unshardable when the axis size exceeds KH).
+    Returns (B, Sq, H, D).  Outer scan over q chunks, inner scan over kv
+    chunks carrying (m, l, acc) running f32 statistics — the live score
+    buffer is (B, H, q_chunk, kv_chunk).
+    """
+    B, Sq, H, D = q.shape
+    Skv = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    def attend_chunk(qc, qpos):
+        """qc: (B, C, H, D) -> (B, C, H, D)."""
+        C = qc.shape[1]
+
+        def scores(kc, kvpos):
+            s = jnp.einsum("bchd,bthd->bhct", qc, kc,
+                           preferred_element_type=jnp.float32) * scale
+            if causal:
+                mask = qpos[:, None] >= kvpos[None, :]          # (C, Tc)
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            return s
+
+        if Skv <= kv_chunk or Skv % kv_chunk != 0:
+            s = scores(k, kv_positions)
+            m = jnp.max(s, axis=-1, keepdims=True)
+            p = jnp.exp(s - m)
+            l = jnp.sum(p, axis=-1)
+            acc = jnp.einsum("bhct,bthd->bhcd", p, v,
+                             preferred_element_type=jnp.float32)
+        else:
+            nk = Skv // kv_chunk
+            ks = k.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+            vs = v.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
+            kvps = kv_positions.reshape(nk, kv_chunk)
+
+            def body(carry, xs):
+                m, l, acc = carry
+                kc, vc, kvpos = xs
+                s = scores(kc, kvpos)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
+                p = jnp.exp(s - m_new)
+                alpha = jnp.exp(m - m_new)
+                l = l * alpha[..., 0] + jnp.sum(p, axis=-1)
+                acc = acc * alpha + jnp.einsum(
+                    "bhct,bthd->bhcd", p, vc,
+                    preferred_element_type=jnp.float32)
+                return (m_new, l, acc), None
+
+            m0 = jnp.full((B, H, C, 1), NEG_INF, jnp.float32)
+            l0 = jnp.zeros((B, H, C), jnp.float32)
+            a0 = jnp.zeros((B, H, C, D), jnp.float32)
+            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kvps))
+
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,C,H,D)
+
+    if Sq <= q_chunk or Sq % q_chunk != 0:
+        return attend_chunk(q, q_positions)
+
+    n = Sq // q_chunk
+    qs = q.reshape(B, n, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
+    ps = q_positions.reshape(n, q_chunk)
+
+    def body(_, xs):
+        qc, qpos = xs
+        return None, attend_chunk(qc, qpos)
+
+    _, outs = jax.lax.scan(body, None, (qs, ps))
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: "xla" backend in the kernel layout
+# --------------------------------------------------------------------------- #
+def flash_attention_xla(q, k, v, *, causal: bool = True, block_q=None,
+                        block_k=None):
+    """Kernel-layout adapter: q (B, H, S, D); k/v (B, KH, T, D)."""
+    B, H, S, D = q.shape
+    _, KH, T, _ = k.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt, vt = k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    if KH != H:
+        kt = jnp.repeat(kt, H // KH, axis=2)
+        vt = jnp.repeat(vt, H // KH, axis=2)
+    out = mha_chunked(qt, kt, vt, causal=causal,
+                      q_positions=jnp.arange(S), kv_positions=jnp.arange(T),
+                      q_chunk=int(block_q) if block_q else 512,
+                      kv_chunk=int(block_k) if block_k else 1024)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _supports(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return q.shape[1] % k.shape[1] == 0 and k.shape == v.shape
+
+
+dispatch.register("flash_attention", "xla", priority=50,
+                  supports=_supports)(flash_attention_xla)

@@ -1,10 +1,16 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd public wrappers for the kernel ops, routed through the dispatcher.
 
-On a CPU host the kernels execute in ``interpret=True`` mode (Pallas TPU
-kernels cannot lower to the CPU backend); on TPU they compile natively.
-``repro.models.layers`` keeps a pure-XLA path for the SPMD dry-run — these
-wrappers are the drop-in hot-spot implementations for real hardware and the
-oracle-validated artifacts for tests.
+These are the stable entry points model code and tests use.  Backend
+resolution order: explicit ``backend=`` > ``interpret=`` legacy flag >
+``dispatch.force_backend`` context / ``REPRO_KERNEL_BACKEND`` env vars >
+automatic platform/shape selection (native Pallas on TPU, reference or
+chunked-XLA elsewhere).
+
+Resolution runs EAGERLY at every call (``dispatch.select``), and the
+*chosen* backend is then a static argument of the inner jit — so the
+compiled-trace cache is keyed by the actual implementation, and changing
+an env var, a ``force_backend`` context, or the active mesh between
+calls can never serve a stale trace.
 """
 
 from __future__ import annotations
@@ -12,37 +18,72 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
-from .decode_attention import decode_attention as _decode
-from .flash_attention import flash_attention as _flash
-from .rwkv6_scan import wkv6 as _wkv6
+from . import dispatch
 
 
-def _on_cpu() -> bool:
-    return jax.default_backend() == "cpu"
+def _resolve(backend: str | None, interpret: bool | None) -> str | None:
+    """Strict part of backend resolution; None defers to ``select`` (env
+    and context overrides, then auto)."""
+    if backend is not None:
+        return backend
+    if interpret is True:
+        return "interpret"
+    if interpret is False:
+        return "pallas"
+    return None
 
 
 @partial(jax.jit, static_argnames=("causal", "block_q", "block_k",
-                                   "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
-                    block_k: int = 256, interpret: bool | None = None):
+                                   "backend"))
+def _flash(q, k, v, *, causal, block_q, block_k, backend):
+    return dispatch.call("flash_attention", q, k, v, causal=causal,
+                         block_q=block_q, block_k=block_k, backend=backend)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int | None = None, block_k: int | None = None,
+                    interpret: bool | None = None,
+                    backend: str | None = None):
     """q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D)."""
-    interpret = _on_cpu() if interpret is None else interpret
+    impl = dispatch.select("flash_attention", q, k, v, causal=causal,
+                           block_q=block_q, block_k=block_k,
+                           backend=_resolve(backend, interpret))
     return _flash(q, k, v, causal=causal, block_q=block_q, block_k=block_k,
-                  interpret=interpret)
+                  backend=impl.backend)
 
 
-@partial(jax.jit, static_argnames=("block_k", "interpret"))
-def decode_attention(q, k, v, kv_len, *, block_k: int = 512,
-                     interpret: bool | None = None):
+@partial(jax.jit, static_argnames=("block_k", "backend"))
+def _decode(q, k, v, kv_len, *, block_k, backend):
+    return dispatch.call("decode_attention", q, k, v, kv_len,
+                         block_k=block_k, backend=backend)
+
+
+def decode_attention(q, k, v, kv_len, *, block_k: int | None = None,
+                     interpret: bool | None = None,
+                     backend: str | None = None):
     """q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)."""
-    interpret = _on_cpu() if interpret is None else interpret
-    return _decode(q, k, v, kv_len, block_k=block_k, interpret=interpret)
+    impl = dispatch.select("decode_attention", q, k, v, kv_len,
+                           block_k=block_k,
+                           backend=_resolve(backend, interpret))
+    return _decode(q, k, v, kv_len, block_k=block_k, backend=impl.backend)
 
 
-@partial(jax.jit, static_argnames=("chunk", "interpret"))
-def wkv6(r, k, v, w, u, *, chunk: int = 64, interpret: bool | None = None):
-    """RWKV6 recurrence; r/k/v/w: (B, H, T, N); u: (H, N)."""
-    interpret = _on_cpu() if interpret is None else interpret
-    return _wkv6(r, k, v, w, u, chunk=chunk, interpret=interpret)
+@partial(jax.jit, static_argnames=("chunk", "return_state", "backend"))
+def _wkv6(r, k, v, w, u, initial_state, *, chunk, return_state, backend):
+    return dispatch.call("wkv6", r, k, v, w, u, chunk=chunk,
+                         initial_state=initial_state,
+                         return_state=return_state, backend=backend)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 64, initial_state=None,
+         return_state: bool = False, interpret: bool | None = None,
+         backend: str | None = None):
+    """RWKV6 recurrence; r/k/v/w: (B, H, T, N); u: (H, N).
+    Returns out, plus the final (B, H, N, N) state when ``return_state``."""
+    impl = dispatch.select("wkv6", r, k, v, w, u, chunk=chunk,
+                           initial_state=initial_state,
+                           return_state=return_state,
+                           backend=_resolve(backend, interpret))
+    return _wkv6(r, k, v, w, u, initial_state, chunk=chunk,
+                 return_state=return_state, backend=impl.backend)

@@ -1,4 +1,10 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each oracle is also registered as the "ref" backend of its op in
+``repro.kernels.dispatch`` — the default execution path on CPU hosts,
+where Pallas TPU kernels cannot lower.  ``wkv6_scan`` additionally backs
+the stateful decode path (the Pallas kernel carries no initial state).
+"""
 
 from __future__ import annotations
 
@@ -6,6 +12,10 @@ import math
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.scan import remat_time_scan
+
+from . import dispatch
 
 
 def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
@@ -67,3 +77,85 @@ def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
     tm = lambda a: a.transpose(1, 0, 2, 3)
     S, out = jax.lax.scan(step, state, (tm(r), tm(k), tm(v), tm(w)))
     return out.transpose(1, 0, 2, 3), S
+
+
+def wkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array, *, chunk: int = 64,
+              initial_state: jax.Array | None = None,
+              return_state: bool = False):
+    """WKV6 recurrence in the *kernel* layout: r/k/v/w (B, H, T, N);
+    u (H, N); state (B, H, N, N) f32.
+
+    Time scan in chunks with the inner per-chunk scan rematerialized
+    (``jax.checkpoint``) — bwd memory O(T/chunk · state) instead of
+    O(T · state), same treatment as ``repro.models.recurrent``.
+    Returns out (B, H, T, N), plus the final state when ``return_state``.
+    """
+    B, H, T, N = r.shape
+    S0 = (initial_state if initial_state is not None
+          else jnp.zeros((B, H, N, N), jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S, xs):
+        rt, kt, vt, wt = (a.astype(jnp.float32) for a in xs)  # (B, H, N)
+        kv = kt[..., :, None] * vt[..., None, :]              # (B, H, N, N)
+        o = jnp.einsum("bhi,bhij->bhj", rt, S + uf[None, :, :, None] * kv)
+        return wt[..., :, None] * S + kv, o
+
+    tm = lambda a: a.transpose(2, 0, 1, 3)                    # (T, B, H, N)
+    Sn, out = remat_time_scan(step, S0, (tm(r), tm(k), tm(v), tm(w)),
+                              chunk=chunk)
+    out = out.transpose(1, 2, 0, 3).astype(r.dtype)           # (B, H, T, N)
+    return (out, Sn) if return_state else out
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: the "ref" backend of every op
+# --------------------------------------------------------------------------- #
+_MAX_REF_SCORES = 1 << 24   # B*H*S*T elements; larger -> chunked-XLA path
+
+
+def _flash_supports(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return q.shape[1] % k.shape[1] == 0 and k.shape == v.shape
+
+
+def _flash_small(q, k, v, *, causal=True, block_q=None, block_k=None):
+    # preference only (auto_gate): above this the score tensor is large
+    # enough that auto-selection should prefer the chunked-XLA path; a
+    # forced backend="ref" still runs.
+    B, H, S, D = q.shape
+    return B * H * S * k.shape[2] <= _MAX_REF_SCORES
+
+
+@dispatch.register("flash_attention", "ref", priority=60,
+                   supports=_flash_supports, auto_gate=_flash_small)
+def _flash_ref(q, k, v, *, causal=True, block_q=None, block_k=None):
+    return attention_ref(q, k, v, causal=causal)
+
+
+def _decode_supports(q, k, v, kv_len, *, block_k=None):
+    return q.shape[1] == k.shape[1] and k.shape == v.shape
+
+
+def _decode_ref(q, k, v, kv_len, *, block_k=None):
+    B, KH, G, D = q.shape
+    out = decode_attention_ref(q.reshape(B, KH * G, D), k, v, kv_len)
+    return out.reshape(B, KH, G, D)
+
+
+def _wkv6_ref(r, k, v, w, u, *, chunk=64, initial_state=None,
+              return_state=False):
+    return wkv6_scan(r, k, v, w, u, chunk=chunk,
+                     initial_state=initial_state, return_state=return_state)
+
+
+# For decode_attention and wkv6 the reference IS the production XLA
+# lowering (linear-memory softmax / chunk-checkpointed scan), so the same
+# fn registers under both names — keeping the "xla" override usable on
+# every op (flash_attention's distinct chunked impl lives in mha_xla.py).
+dispatch.register("decode_attention", "ref", priority=60,
+                  supports=_decode_supports)(_decode_ref)
+dispatch.register("decode_attention", "xla", priority=50,
+                  supports=_decode_supports)(_decode_ref)
+dispatch.register("wkv6", "ref", priority=60)(_wkv6_ref)
+dispatch.register("wkv6", "xla", priority=50)(_wkv6_ref)

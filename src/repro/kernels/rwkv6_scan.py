@@ -20,6 +20,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro import compat
+
+from . import dispatch
+
 
 def _wkv6_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, state_ref, *,
                  chunk: int, n_chunks: int):
@@ -70,7 +74,42 @@ def wkv6(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_specs=spec("seq"),
         out_shape=jax.ShapeDtypeStruct((B, H, T, N), r.dtype),
         scratch_shapes=[pltpu.VMEM((N, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w, u)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: "pallas" (native TPU) and "interpret" backends.
+# The kernel carries no initial state and does not emit the final state, so
+# it is only eligible for the stateless ``return_state=False`` form; the
+# "ref" backend (chunk-checkpointed scan) covers the stateful decode path.
+# --------------------------------------------------------------------------- #
+def _supports(r, k, v, w, u, *, chunk=64, initial_state=None,
+              return_state=False):
+    if initial_state is not None or return_state:
+        return False
+    T = r.shape[2]
+    return T % min(chunk, T) == 0
+
+
+@functools.lru_cache(maxsize=None)
+def _grad_ready(chunk, interpret):
+    from . import ref
+    kern = functools.partial(wkv6, chunk=chunk, interpret=interpret)
+    return dispatch.with_reference_vjp(kern, ref.wkv6_scan)
+
+
+def _via_pallas(r, k, v, w, u, *, chunk=64, initial_state=None,
+                return_state=False, interpret=False):
+    del initial_state, return_state  # unsupported; gated by _supports
+    return _grad_ready(chunk, interpret)(r, k, v, w, u)
+
+
+dispatch.register("wkv6", "pallas", platforms=("tpu",),
+                  priority=100, supports=_supports, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=False))
+dispatch.register("wkv6", "interpret", priority=20, supports=_supports,
+                  spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=True))

@@ -8,16 +8,14 @@ jax initializes.
 
 from __future__ import annotations
 
-import jax
-
+from repro import compat
 from repro.core.device import MeshSpec, multi_pod_mesh_spec, single_pod_mesh_spec
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
@@ -27,6 +25,4 @@ def production_mesh_spec(*, multi_pod: bool = False) -> MeshSpec:
 
 def make_smoke_mesh(data: int = 1, model: int = 1):
     """Single-device mesh for CPU smoke tests."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return compat.make_mesh((data, model), ("data", "model"))

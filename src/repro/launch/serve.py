@@ -32,6 +32,9 @@ def main() -> None:
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--experts", type=int, default=4)
+    ap.add_argument("--kernel-backend", default="",
+                    help="force a kernel dispatch backend "
+                         "(pallas|interpret|xla|ref); default auto")
     args = ap.parse_args()
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
@@ -48,7 +51,8 @@ def main() -> None:
 
     kw = {"enc_len": batch["frames"].shape[1]} if arch.enc_layers else {}
     cache = mod.init_cache(arch, args.batch, max_len, jnp.float32, **kw)
-    prefill_fn, decode_fn = make_serve_fns(arch, plan, q_chunk=256)
+    prefill_fn, decode_fn = make_serve_fns(
+        arch, plan, q_chunk=256, kernel_backend=args.kernel_backend or None)
     prefill_jit = jax.jit(prefill_fn)
     decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
 

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
 from repro.checkpoint import CheckpointManager
 from repro.core import find_strategy, BASELINES
 from repro.core.device import AxisSpec, ICI_BW, MeshSpec
@@ -78,6 +78,9 @@ def main() -> None:
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--metrics-out", default="")
+    ap.add_argument("--kernel-backend", default="",
+                    help="force a kernel dispatch backend "
+                         "(pallas|interpret|xla|ref); default auto")
     args = ap.parse_args()
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
@@ -86,8 +89,7 @@ def main() -> None:
     n_dev = jax.device_count()
 
     # mesh over available devices: prefer pure-data on small hosts
-    mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((n_dev, 1), ("data", "model"))
     mesh_spec = MeshSpec(axes=(AxisSpec("data", n_dev, ICI_BW),
                                AxisSpec("model", 1, ICI_BW)))
 
@@ -105,7 +107,7 @@ def main() -> None:
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
                           total_steps=args.steps)
     tcfg = TrainConfig(optimizer=opt_cfg, q_chunk=256, time_chunk=32,
-                       remat=True)
+                       remat=True, kernel_backend=args.kernel_backend or None)
     step_fn = make_train_step(arch, plan, tcfg)
     ds = make_dataset(arch, shape)
 

@@ -5,10 +5,12 @@ All functions are functional (params-in, activations-out) and accept a
 searched strategy via ``with_sharding_constraint`` (no-op without an active
 mesh, so smoke tests run unchanged on one CPU device).
 
-Attention is computed with a q-chunked online-softmax scan (an XLA-level
-flash attention): peak memory is O(q_chunk * kv_len) instead of O(S^2).
-The Pallas TPU kernel in ``repro.kernels`` is the hot-spot implementation
-for real hardware; the XLA path is what the (CPU-hosted) dry-run lowers.
+Self-attention (train / prefill / decode) goes through the kernel
+dispatcher (``repro.kernels.dispatch``): native Pallas on TPU, the
+reference or chunked-XLA path elsewhere, selected per platform/shape and
+overridable via ``REPRO_KERNEL_BACKEND``.  Cross-attention
+(``kv_override``) keeps the chunked-XLA core directly — it needs
+free-form KV positions the blocked kernels do not take.
 """
 
 from __future__ import annotations
@@ -21,6 +23,8 @@ import jax.numpy as jnp
 
 from repro.core.config import LayerConfig
 from repro.core.sharding import constrain
+from repro.kernels import dispatch as kernel_dispatch
+from repro.kernels.mha_xla import mha_chunked as _mha_core  # noqa: F401
 
 # --------------------------------------------------------------------------- #
 # init helpers
@@ -99,84 +103,6 @@ def init_attention(key, arch, dtype):
     return p
 
 
-def _mha_core(q, k, v, *, causal: bool, q_positions, kv_positions,
-              q_chunk: int = 512, kv_chunk: int = 1024):
-    """Online-softmax (flash-style) attention in pure XLA.
-
-    q: (B, Sq, H, D); k/v: (B, Skv, H, D) — KV already expanded to the full
-    head count (GQA expansion happens in the caller as a broadcast that
-    GSPMD fuses with the per-shard slice, so the heads dim stays shardable
-    at full TP degree; reshaping H -> (KH, G) instead makes the dim
-    unshardable when the axis size exceeds KH).
-    Returns (B, Sq, H, D).  Outer scan over q chunks, inner scan over kv
-    chunks carrying (m, l, acc) running f32 statistics — the live score
-    buffer is (B, H, q_chunk, kv_chunk).
-    """
-    B, Sq, H, D = q.shape
-    Skv = k.shape[1]
-    scale = 1.0 / math.sqrt(D)
-
-    def attend_chunk(qc, qpos):
-        """qc: (B, C, H, D) -> (B, C, H, D)."""
-        C = qc.shape[1]
-
-        def scores(kc, kvpos):
-            s = jnp.einsum("bchd,bthd->bhct", qc, kc,
-                           preferred_element_type=jnp.float32) * scale
-            if causal:
-                mask = qpos[:, None] >= kvpos[None, :]          # (C, Tc)
-                s = jnp.where(mask[None, None], s, -1e30)
-            return s
-
-        if Skv <= kv_chunk or Skv % kv_chunk != 0:
-            s = scores(k, kv_positions)
-            m = jnp.max(s, axis=-1, keepdims=True)
-            p = jnp.exp(s - m)
-            l = jnp.sum(p, axis=-1)
-            acc = jnp.einsum("bhct,bthd->bhcd", p, v,
-                             preferred_element_type=jnp.float32)
-        else:
-            nk = Skv // kv_chunk
-            ks = k.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
-            vs = v.reshape(B, nk, kv_chunk, H, D).transpose(1, 0, 2, 3, 4)
-            kvps = kv_positions.reshape(nk, kv_chunk)
-
-            def body(carry, xs):
-                m, l, acc = carry
-                kc, vc, kvpos = xs
-                s = scores(kc, kvpos)
-                m_new = jnp.maximum(m, jnp.max(s, axis=-1, keepdims=True))
-                p = jnp.exp(s - m_new)
-                alpha = jnp.exp(m - m_new)
-                l = l * alpha[..., 0] + jnp.sum(p, axis=-1)
-                acc = acc * alpha + jnp.einsum(
-                    "bhct,bthd->bhcd", p, vc,
-                    preferred_element_type=jnp.float32)
-                return (m_new, l, acc), None
-
-            m0 = jnp.full((B, H, C, 1), -1e30, jnp.float32)
-            l0 = jnp.zeros((B, H, C), jnp.float32)
-            a0 = jnp.zeros((B, H, C, D), jnp.float32)
-            (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, kvps))
-
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
-        return out.transpose(0, 2, 1, 3).astype(q.dtype)     # (B,C,H,D)
-
-    if Sq <= q_chunk or Sq % q_chunk != 0:
-        return attend_chunk(q, q_positions)
-
-    n = Sq // q_chunk
-    qs = q.reshape(B, n, q_chunk, H, D).transpose(1, 0, 2, 3, 4)
-    ps = q_positions.reshape(n, q_chunk)
-
-    def body(_, xs):
-        qc, qpos = xs
-        return None, attend_chunk(qc, qpos)
-
-    _, outs = jax.lax.scan(body, None, (qs, ps))
-    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, D)
-
-
 def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
               *, positions: jax.Array, causal: bool = True,
               kv_cache: dict | None = None, cache_pos=None,
@@ -224,19 +150,52 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         # mask out beyond-cache positions via causality vs current position
         causal = True
 
-    # GQA expansion to full head count: a broadcast GSPMD fuses with the
-    # per-shard slice, keeping the heads dim shardable at full TP degree.
-    if G > 1:
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
-
-    # constrain q/k/v per the searched config: (batch, seq, heads)
+    # constrain q/k/v per the searched config: (batch, seq, heads).  K/V
+    # stay at their native KH width — the dispatched kernels are
+    # GQA-aware, so the cache is never physically duplicated; when the
+    # heads TP degree exceeds KH, ``constrain`` drops the axis (the
+    # standard replicated-KV GQA fallback).
     q = constrain(q, cfg, ("batch", "seq", "heads", None))
     k = constrain(k, cfg, ("batch", "seq", "heads", None))
     v = constrain(v, cfg, ("batch", "seq", "heads", None))
 
-    o = _mha_core(q, k, v, causal=causal, q_positions=positions,
-                  kv_positions=kv_positions, q_chunk=q_chunk)
+    # The blocked kernels mask with 0-based contiguous positions.  That
+    # matches every self-attention form except a mid-sequence cache
+    # continuation (cache_pos > 0 with S > 1, where query row i sits at
+    # absolute position cache_pos + i): no-cache self-attention compares
+    # ``positions`` against itself (offset-invariant), prefill writes the
+    # cache at a literal cache_pos == 0, and single-token decode is
+    # handled as an explicit kv_len below.
+    contiguous = (kv_cache is None or S == 1
+                  or (isinstance(cache_pos, int) and cache_pos == 0))
+    if kv_override is None and contiguous:
+        # Self-attention through the dispatcher.
+        H = q.shape[2]
+        kh = k.shape[2]
+        kt = k.transpose(0, 2, 1, 3)                       # (B, KH, T, D)
+        vt = v.transpose(0, 2, 1, 3)
+        if kv_cache is not None and S == 1:
+            # single-token decode over the cache: split-KV kernel with the
+            # GQA group as the q sublane axis (head h -> kv head h // G),
+            # valid positions < pos + 1
+            qg = q.reshape(B, kh, H // kh, hd)             # (B, KH, G, D)
+            o = kernel_dispatch.call("decode_attention", qg, kt, vt,
+                                     positions[0] + 1)
+            o = o.reshape(B, 1, H, hd)
+        else:
+            o = kernel_dispatch.call(
+                "flash_attention", q.transpose(0, 2, 1, 3), kt, vt,
+                causal=causal, block_q=q_chunk)
+            o = o.transpose(0, 2, 1, 3)
+    else:
+        # Cross-attention (free-form memory positions) and mid-sequence
+        # cache continuation -> the positions-aware chunked-XLA core
+        # (which wants KV expanded to the full head count).
+        if G > 1:
+            k = jnp.repeat(k, G, axis=2)
+            v = jnp.repeat(v, G, axis=2)
+        o = _mha_core(q, k, v, causal=causal, q_positions=positions,
+                      kv_positions=kv_positions, q_chunk=q_chunk)
     o = constrain(o, cfg, ("batch", "seq", "heads", None))
     return o, new_cache
 

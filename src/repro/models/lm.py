@@ -3,7 +3,10 @@
 Params are a pytree with every per-layer array stacked over **pattern
 units** (leading dim ``n_units``); the forward pass slices the stack per
 plan segment and ``lax.scan``s each segment, applying that segment's
-sublayer configs via sharding constraints.
+sublayer configs via sharding constraints.  Attention and the WKV6
+recurrence execute through ``repro.kernels.dispatch`` (selected per
+platform/shape; force with ``REPRO_KERNEL_BACKEND`` or
+``TrainConfig.kernel_backend``).
 
 Entry points:
   init_lm(rng, arch, dtype)                      -> params

@@ -22,31 +22,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.config import LayerConfig
+from repro.core.scan import remat_time_scan  # noqa: F401  (re-export)
 from repro.core.sharding import constrain
+from repro.kernels import dispatch as kernel_dispatch
 
 from .layers import dense_init
-
-
-# --------------------------------------------------------------------------- #
-# chunk-checkpointed time scan
-# --------------------------------------------------------------------------- #
-def remat_time_scan(step, carry, xs, chunk: int = 64):
-    """``step(carry, x_t) -> (carry, y_t)`` scanned over time axis 0 of the
-    leaves of ``xs``; the inner per-chunk scan is rematerialized."""
-    S = jax.tree.leaves(xs)[0].shape[0]
-    if S % chunk != 0 or S <= chunk:
-        return jax.lax.scan(step, carry, xs)
-    n = S // chunk
-    xs_c = jax.tree.map(
-        lambda a: a.reshape((n, chunk) + a.shape[1:]), xs)
-
-    @jax.checkpoint
-    def chunk_body(c, xc):
-        return jax.lax.scan(step, c, xc)
-
-    carry, ys = jax.lax.scan(chunk_body, carry, xs_c)
-    ys = jax.tree.map(lambda a: a.reshape((S,) + a.shape[2:]), ys)
-    return carry, ys
 
 
 def token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
@@ -80,23 +60,17 @@ def init_rwkv_tmix(key, arch, dtype):
     }
 
 
-def _wkv6_step(carry, xs):
-    """carry: S (B,H,hs,hs) f32; xs: (r,k,v,w,u) per step."""
-    S = carry
-    r, k, v, w, u = xs
-    r = r.astype(jnp.float32)
-    k = k.astype(jnp.float32)
-    v = v.astype(jnp.float32)
-    w = w.astype(jnp.float32)
-    kv = k[..., :, None] * v[..., None, :]               # (B,H,hs,hs)
-    o = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
-    S = w[..., :, None] * S + kv
-    return S, o
-
-
 def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
               state: dict | None = None, chunk: int = 64):
-    """x: (B,S,D) -> (y, new_state).  state: {"shift": (B,D), "wkv": (B,H,hs,hs)}."""
+    """x: (B,S,D) -> (y, new_state).  state: {"shift": (B,D), "wkv": (B,H,hs,hs)}.
+
+    The WKV6 recurrence goes through the kernel dispatcher (native Pallas
+    on TPU for the stateless training form, chunk-checkpointed scan
+    elsewhere / when a carried state is needed).  When called without
+    ``state`` the returned ``new_state["wkv"]`` is None — training
+    discards it, and computing the final state would force the scan
+    backend even where the fused kernel is eligible.
+    """
     B, S, D = x.shape
     H, hs = arch.n_rwkv_heads, arch.rwkv_head_size
     prev = state["shift"] if state is not None else None
@@ -115,17 +89,20 @@ def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     k = constrain(k, cfg, ("batch", "seq", "heads", None))
     v = constrain(v, cfg, ("batch", "seq", "heads", None))
 
-    # time-major for the scan; r/k/v stream in the activation dtype, the
+    # head-major kernel layout; r/k/v stream in the activation dtype, the
     # decay w and the state stay f32 (w^4096 compounding is precision-
-    # critical), f32 math inside the step.
-    tm = lambda a: a.transpose(1, 0, 2, 3)
+    # critical), f32 math inside the recurrence.
+    hm = lambda a: a.transpose(0, 2, 1, 3)                # (B, H, S, hs)
     u = p["u"].astype(jnp.float32)
-    S0 = (state["wkv"] if state is not None
-          else jnp.zeros((B, H, hs, hs), jnp.float32))
-    us = jnp.broadcast_to(u, (S,) + u.shape)  # constant per step
-    Sn, o = remat_time_scan(
-        _wkv6_step, S0, (tm(r), tm(k), tm(v), tm(w), us), chunk=chunk)
-    o = o.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    if state is not None:
+        o, Sn = kernel_dispatch.call(
+            "wkv6", hm(r), hm(k), hm(v), hm(w), u, chunk=chunk,
+            initial_state=state["wkv"], return_state=True)
+    else:
+        o = kernel_dispatch.call(
+            "wkv6", hm(r), hm(k), hm(v), hm(w), u, chunk=chunk)
+        Sn = None
+    o = hm(o).reshape(B, S, D).astype(x.dtype)
 
     # per-head group norm
     of = o.reshape(B, S, H, hs).astype(jnp.float32)

@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import model_module
 from repro.models.arch import ArchConfig
 from repro.models.plan import ModelPlan, uniform_plan
@@ -34,6 +35,8 @@ class TrainConfig:
     remat_policy: str = "nothing"
     loss_chunk: int = 512
     aux_coef: float = 0.01
+    # force a kernel dispatch backend (pallas|interpret|xla|ref); None = auto
+    kernel_backend: str | None = None
 
 
 def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
@@ -53,7 +56,7 @@ def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
 
     grad_fn = jax.value_and_grad(loss, has_aux=True)
 
-    def train_step(params, opt_state, batch):
+    def _step(params, opt_state, batch):
         if cfg.microbatches <= 1:
             (l, metrics), grads = grad_fn(params, batch)
         else:
@@ -86,18 +89,27 @@ def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
         metrics.update(om)
         return new_params, new_state, metrics
 
+    def train_step(params, opt_state, batch):
+        # backend selection happens at trace time, so the context applies
+        # inside jit; a no-op when kernel_backend is None (auto-select)
+        with kernel_dispatch.force_backend(cfg.kernel_backend):
+            return _step(params, opt_state, batch)
+
     return train_step
 
 
 def make_serve_fns(arch: ArchConfig, plan: ModelPlan | None = None,
-                   q_chunk: int = 512):
+                   q_chunk: int = 512, kernel_backend: str | None = None):
     plan = plan if plan is not None else uniform_plan(arch)
     mod = model_module(arch)
 
     def prefill(params, batch, cache):
-        return mod.prefill(params, batch, cache, arch, plan, q_chunk=q_chunk)
+        with kernel_dispatch.force_backend(kernel_backend):
+            return mod.prefill(params, batch, cache, arch, plan,
+                               q_chunk=q_chunk)
 
     def decode_step(params, token, cache, pos):
-        return mod.decode_step(params, token, cache, pos, arch, plan)
+        with kernel_dispatch.force_backend(kernel_backend):
+            return mod.decode_step(params, token, cache, pos, arch, plan)
 
     return prefill, decode_step

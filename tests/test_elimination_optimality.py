@@ -13,6 +13,9 @@ import itertools
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need the hypothesis package")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (

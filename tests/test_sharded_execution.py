@@ -47,9 +47,10 @@ SCRIPT = textwrap.dedent("""
     # single-device reference
     p1, o1, m1 = jax.jit(step)(params, opt, batch)
 
-    # sharded run with the searched plan
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    # sharded run with the searched plan (compat.make_mesh: axis_types
+    # only on JAX versions that support it)
+    from repro import compat
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     p_sh = to_shardings(param_pspecs(params, arch, plan), mesh, like=params)
     b_sh = to_shardings(batch_pspecs(batch, plan), mesh, like=batch)
     params_s = jax.device_put(params, p_sh)
