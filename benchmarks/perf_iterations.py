@@ -16,7 +16,6 @@ import argparse
 import json
 from pathlib import Path
 
-from repro.launch.dryrun import RESULTS, dryrun_cell
 from repro.train import TrainConfig
 
 
@@ -53,6 +52,9 @@ VARIANTS = {
 
 def run_variant(arch_name: str, shape_name: str, mesh: str, variant: str,
                 hypothesis: str = "", strategy: str = "search") -> dict:
+    # imported lazily: repro.launch.dryrun pins XLA to 512 simulated host
+    # devices at import, which must not leak into the --smoke path
+    from repro.launch.dryrun import RESULTS, dryrun_cell
     from repro import configs
     arch = configs.get(arch_name)
     make = VARIANTS[variant]
@@ -77,13 +79,79 @@ def run_variant(arch_name: str, shape_name: str, mesh: str, variant: str,
     return entry
 
 
+def run_smoke(out: str, steps: int = 5, archs: tuple[str, ...] = (
+        "llama3_2_1b", "olmoe_1b_7b", "jamba_1_5_large")) -> dict:
+    """CI-sized wall-clock benchmark: a few real train steps of each arch
+    family (dense / MoE / Mamba-hybrid) at toy width on whatever devices
+    exist, so every CI run appends one point to the perf trajectory
+    (``BENCH_*.json`` artifacts).  Absolute numbers are runner-dependent;
+    the per-arch tokens/s ratio drifting is the signal."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.data import make_dataset
+    from repro.launch.train import reduced_arch
+    from repro.models import model_module, uniform_plan
+    from repro.models.arch import ShapeSpec
+    from repro.optim import adamw_init
+    from repro.train import make_train_step
+
+    report: dict = {"kind": "smoke", "jax": jax.__version__,
+                    "backend": jax.default_backend(), "cells": {}}
+    for name in archs:
+        # width 128 keeps every arch's head_dim >= 2 (jamba has 64 heads)
+        arch = reduced_arch(configs.get(name), 128, 8, 256, 4)
+        shape = ShapeSpec("smoke", 128, 4, "train")
+        mod = model_module(arch)
+        step_fn = jax.jit(make_train_step(
+            arch, uniform_plan(arch), TrainConfig(q_chunk=64, time_chunk=16)))
+        params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+        opt = adamw_init(params)
+        ds = make_dataset(arch, shape)
+        batch = jax.tree.map(jnp.asarray, ds.batch_at(0))
+        t0 = time.perf_counter()
+        params, opt, metrics = step_fn(params, opt, batch)   # compile
+        jax.block_until_ready(metrics["loss"])
+        compile_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        for i in range(steps):
+            batch = jax.tree.map(jnp.asarray, ds.batch_at(i + 1))
+            params, opt, metrics = step_fn(params, opt, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = time.perf_counter() - t0
+        report["cells"][name] = {
+            "compile_s": round(compile_s, 3),
+            "step_s": round(dt / steps, 4),
+            "tok_per_s": round(shape.tokens * steps / max(dt, 1e-9)),
+            "final_loss": float(metrics["loss"]),
+        }
+        print(f"{name}: step {dt / steps * 1e3:.1f} ms  "
+              f"{report['cells'][name]['tok_per_s']} tok/s")
+    Path(out).write_text(json.dumps(report, indent=1))
+    print(f"wrote {out}")
+    return report
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--cell", required=True,
+    ap.add_argument("--cell",
                     help="arch/shape/mesh, e.g. llama3_2_1b/train_4k/single")
-    ap.add_argument("--variant", required=True, choices=list(VARIANTS))
+    ap.add_argument("--variant", choices=list(VARIANTS))
     ap.add_argument("--hypothesis", default="")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny wall-clock benchmark (CI perf trajectory) "
+                         "instead of a dry-run variant")
+    ap.add_argument("--out", default="BENCH_smoke.json",
+                    help="output path for --smoke")
     args = ap.parse_args()
+    if args.smoke:
+        run_smoke(args.out)
+        return
+    if not (args.cell and args.variant):
+        ap.error("--cell and --variant are required without --smoke")
     arch, shape, mesh = args.cell.split("/")
     e = run_variant(arch, shape, mesh, args.variant, args.hypothesis)
     b = e.get("baseline")

@@ -28,17 +28,101 @@ Fig. 8) falls out of the same code path.
 
 from __future__ import annotations
 
+from typing import Callable
+
 import numpy as np
 
 from .config import LayerConfig
 from .device import CollectiveCost, MeshSpec, ZERO_COST
 from .graph import CompGraph, Edge, LayerNode, Strategy, TensorSpec
 
+# --------------------------------------------------------------------------- #
+# Per-backend kernel cost hooks.
+#
+# The roofline in t_c assumes the layer's hot loop runs at hardware
+# efficiency; for ops behind the kernel dispatcher the achievable fraction
+# depends on WHICH backend executes (a sequential reference scan on the VPU
+# is nowhere near a fused Pallas kernel).  A hook, keyed by
+# (dispatch op, backend), returns a multiplicative factor on the layer's
+# roofline time; ``CostModel(kernel_backends={...})`` prices a strategy
+# under a chosen backend per op.  No entry / no hook -> factor 1.0, so the
+# default cost model is unchanged.
+# --------------------------------------------------------------------------- #
+KERNEL_OP_FOR_KIND = {"ssm": "mamba_scan", "moe": "moe_dispatch_combine"}
+
+_KERNEL_COST_HOOKS: dict[tuple[str, str], Callable[[LayerNode], float]] = {}
+
+
+def register_kernel_cost_hook(op: str, backend: str):
+    """Decorator: ``fn(node) -> float`` multiplies the roofline time of
+    every ``node`` whose kind executes through ``op`` on ``backend``."""
+
+    def deco(fn):
+        _KERNEL_COST_HOOKS[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def kernel_time_factor(node: LayerNode,
+                       kernel_backends: dict[str, str]) -> float:
+    op = KERNEL_OP_FOR_KIND.get(node.kind)
+    backend = kernel_backends.get(op) if op else None
+    if backend is None:
+        return 1.0
+    fn = _KERNEL_COST_HOOKS.get((op, backend))
+    return fn(node) if fn is not None else 1.0
+
+
+@register_kernel_cost_hook("mamba_scan", "ref")
+def _mamba_ref_factor(node: LayerNode) -> float:
+    # sequential per-step scan: the recurrence issues O(S) tiny VPU ops
+    # with no overlap between the state update and the HBM streams.
+    return 3.0
+
+
+@register_kernel_cost_hook("mamba_scan", "xla")
+def _mamba_xla_factor(node: LayerNode) -> float:
+    # chunked associative scan: ~2x the FLOPs of the recurrence (up-sweep
+    # + down-sweep) but parallel across the chunk, and the (chunk, di, N)
+    # discretized terms round-trip HBM once.
+    return 1.5
+
+
+@register_kernel_cost_hook("mamba_scan", "pallas")
+def _mamba_pallas_factor(node: LayerNode) -> float:
+    # fused kernel: state resident in VMEM, inputs streamed once.
+    return 1.0
+
+
+@register_kernel_cost_hook("moe_dispatch_combine", "ref")
+def _moe_ref_factor(node: LayerNode) -> float:
+    # dense one-hot dispatch einsums move an O(S·E·C) tensor through the
+    # MXU on top of the expert FFN (~E·C/(S·K) extra work at cap 1.25).
+    return 1.0 + 2.0 * float(node.extra.get("capacity_factor", 1.25))
+
+
+@register_kernel_cost_hook("moe_dispatch_combine", "xla")
+def _moe_xla_factor(node: LayerNode) -> float:
+    # scatter/gather dispatch: the production path the roofline models.
+    return 1.0
+
+
+@register_kernel_cost_hook("moe_dispatch_combine", "pallas")
+def _moe_pallas_factor(node: LayerNode) -> float:
+    # fused dispatch keeps the (E·C, D) buffer in VMEM instead of a
+    # scatter->HBM->einsum round trip.
+    return 0.9
+
 
 class CostModel:
-    def __init__(self, mesh: MeshSpec, training: bool = True):
+    def __init__(self, mesh: MeshSpec, training: bool = True,
+                 kernel_backends: dict[str, str] | None = None):
         self.mesh = mesh
         self.training = training  # inference => no t_S, no bwd collectives
+        # op name -> dispatch backend the strategy will execute with (see
+        # kernel cost hooks above); absent ops price at factor 1.0.
+        self.kernel_backends = dict(kernel_backends or {})
         self._reshard_cache: dict = {}
         # memoization of per-node vectors / per-edge matrices: sound here
         # because t_C/t_S/t_X are pure functions of the keyed quantities
@@ -59,7 +143,8 @@ class CostModel:
         compute = node.flops / deg / mesh.chip.eff_flops
         memory = (node.act_bytes / deg
                   + node.param_bytes / pdeg) / mesh.chip.eff_hbm_bw
-        t = max(compute, memory) + self.internal_comm(node, cfg).time
+        factor = kernel_time_factor(node, self.kernel_backends)
+        t = factor * max(compute, memory) + self.internal_comm(node, cfg).time
         if cfg.fsdp and node.param_bytes > 0:
             # FSDP: params stored sharded across the replicating axes and
             # all-gathered at each use (fwd + bwd re-gather).

@@ -70,6 +70,48 @@ def decode_attention(q, k, v, kv_len, *, block_k: int | None = None,
 
 
 @partial(jax.jit, static_argnames=("chunk", "return_state", "backend"))
+def _mamba(dt, Bm, Cm, x, A, D, initial_state, *, chunk, return_state,
+           backend):
+    return dispatch.call("mamba_scan", dt, Bm, Cm, x, A, D, chunk=chunk,
+                         initial_state=initial_state,
+                         return_state=return_state, backend=backend)
+
+
+def mamba_scan(dt, Bm, Cm, x, A, D, *, chunk: int = 64, initial_state=None,
+               return_state: bool = False, interpret: bool | None = None,
+               backend: str | None = None):
+    """Selective-scan recurrence; dt/x: (B, S, di); B/C: (B, S, N);
+    A: (di, N); D: (di,).  Returns y, plus the final (B, di, N) f32 state
+    when ``return_state``."""
+    impl = dispatch.select("mamba_scan", dt, Bm, Cm, x, A, D, chunk=chunk,
+                           initial_state=initial_state,
+                           return_state=return_state,
+                           backend=_resolve(backend, interpret))
+    return _mamba(dt, Bm, Cm, x, A, D, initial_state, chunk=chunk,
+                  return_state=return_state, backend=impl.backend)
+
+
+@partial(jax.jit, static_argnames=("capacity", "backend"))
+def _moe(x, gate_vals, expert_idx, wi, wg, wo, *, capacity, backend):
+    return dispatch.call("moe_dispatch_combine", x, gate_vals, expert_idx,
+                         wi, wg, wo, capacity=capacity, backend=backend)
+
+
+def moe_dispatch_combine(x, gate_vals, expert_idx, wi, wg, wo, *,
+                         capacity: int, interpret: bool | None = None,
+                         backend: str | None = None):
+    """MoE dispatch + expert FFN + combine; x: (B, S, D);
+    gate_vals/expert_idx: (B, S, K); wi/wg: (E, D, F); wo: (E, F, D).
+    (Model code calls ``dispatch.call`` directly to thread its sharding
+    ``constrain`` callback; this jit'd wrapper is the plain entry point.)"""
+    impl = dispatch.select("moe_dispatch_combine", x, gate_vals, expert_idx,
+                           wi, wg, wo, capacity=capacity,
+                           backend=_resolve(backend, interpret))
+    return _moe(x, gate_vals, expert_idx, wi, wg, wo, capacity=capacity,
+                backend=impl.backend)
+
+
+@partial(jax.jit, static_argnames=("chunk", "return_state", "backend"))
 def _wkv6(r, k, v, w, u, initial_state, *, chunk, return_state, backend):
     return dispatch.call("wkv6", r, k, v, w, u, chunk=chunk,
                          initial_state=initial_state,

@@ -34,8 +34,20 @@ def main() -> None:
     ap.add_argument("--experts", type=int, default=4)
     ap.add_argument("--kernel-backend", default="",
                     help="force a kernel dispatch backend "
-                         "(pallas|interpret|xla|ref); default auto")
+                         "(pallas|interpret|xla|ref) for every op — "
+                         "attention, wkv6, mamba_scan, moe_dispatch_combine;"
+                         " default auto")
+    ap.add_argument("--autotune-cache-dir", default="",
+                    help="directory for the persistent Pallas block-size "
+                         "autotune cache (default ~/.cache/repro/autotune; "
+                         "same as REPRO_AUTOTUNE_CACHE_DIR) — a restart on "
+                         "the same device kind skips re-tuning")
     args = ap.parse_args()
+    if args.autotune_cache_dir:
+        import os
+
+        from repro.kernels import dispatch as kernel_dispatch
+        os.environ[kernel_dispatch.ENV_CACHE_DIR] = args.autotune_cache_dir
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
                         args.vocab, args.experts)

@@ -31,6 +31,7 @@ from repro.core import find_strategy, BASELINES
 from repro.core.device import AxisSpec, ICI_BW, MeshSpec
 from repro.core.sharding import use_mesh
 from repro.data import make_dataset
+from repro.kernels import dispatch as kernel_dispatch
 from repro.models import model_module, strategy_to_plan, uniform_plan
 from repro.models.arch import ShapeSpec
 from repro.models.graph_export import export_graph
@@ -80,8 +81,17 @@ def main() -> None:
     ap.add_argument("--metrics-out", default="")
     ap.add_argument("--kernel-backend", default="",
                     help="force a kernel dispatch backend "
-                         "(pallas|interpret|xla|ref); default auto")
+                         "(pallas|interpret|xla|ref) for every op — "
+                         "attention, wkv6, mamba_scan, moe_dispatch_combine;"
+                         " default auto")
+    ap.add_argument("--autotune-cache-dir", default="",
+                    help="directory for the persistent Pallas block-size "
+                         "autotune cache (default ~/.cache/repro/autotune; "
+                         "same as REPRO_AUTOTUNE_CACHE_DIR)")
     args = ap.parse_args()
+    if args.autotune_cache_dir:
+        import os
+        os.environ[kernel_dispatch.ENV_CACHE_DIR] = args.autotune_cache_dir
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
                         args.vocab, args.experts)

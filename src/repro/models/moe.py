@@ -1,12 +1,19 @@
-"""Top-k MoE with capacity-based scatter dispatch (GShard-style).
+"""Top-k MoE with capacity-based dispatch (GShard-style).
 
-Fixed-shape dispatch suitable for SPMD: tokens are scattered into per-expert
-buffers of capacity ``C = ceil(cap_factor * T * k / E)``; overflow tokens are
+Fixed-shape dispatch suitable for SPMD: tokens land in per-expert buffers
+of capacity ``C = ceil(cap_factor * T * k / E)``; overflow tokens are
 dropped (contribute zero — residual carries them).  Under an expert-sharded
 config the buffers live on the expert axis and XLA inserts the
 dispatch/combine all-to-alls the cost model priced.
 
-Also computes the standard load-balancing auxiliary loss.
+Routing (router matmul, top-k, gate normalization) and the load-balancing
+auxiliary loss live here; the dispatch -> expert FFN -> combine pipeline
+executes through the ``moe_dispatch_combine`` kernel op (scatter/gather
+XLA path, dense-einsum reference, fused Pallas dispatch on TPU — force
+with ``REPRO_KERNEL_BACKEND[_MOE_DISPATCH_COMBINE]`` or
+``TrainConfig.kernel_backend``).  The layer's sharding constraints reach
+the selected backend through a ``constrain`` callback, so the kernel
+package stays ignorant of plan/config types.
 """
 
 from __future__ import annotations
@@ -16,6 +23,7 @@ import jax.numpy as jnp
 
 from repro.core.config import LayerConfig
 from repro.core.sharding import constrain
+from repro.kernels import dispatch as kernel_dispatch
 
 from .layers import dense_init
 
@@ -61,54 +69,16 @@ def moe_ffn(p: dict, x: jax.Array, arch, cfg: LayerConfig):
         gate_vals.sum(-1, keepdims=True), 1e-9)
     gate_vals = gate_vals.astype(x.dtype)   # keep the combine chain bf16
 
-    # position of each (token, k) assignment within its expert, per group
-    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (B, S, K, E)
-    flat = onehot.reshape(B, S * K, E)
-    pos = jnp.cumsum(flat, axis=1) - flat                      # (B, S*K, E)
-    pos_in_expert = jnp.sum(pos * flat, axis=-1)               # (B, S*K)
-    eidx = expert_idx.reshape(B, S * K)
-    keep = pos_in_expert < C
-
-    # scatter tokens into per-group (E*C, D) buffers (local to the shard).
-    # Dispatch loops over the K routing choices so the (B, S, D)-sized
-    # scatter source is never replicated K times (K=8 for olmoe), and every
-    # tensor touching the scatter/gather is explicitly batch-constrained —
-    # without that, GSPMD gives up on partitioning the scatter and
-    # replicates the cotangents (observed: 4 GiB full-batch f32 buffers in
-    # the 398B dry-run bwd).
-    lin = jnp.where(keep, eidx * C + pos_in_expert, E * C)     # drop slot
-    lin = constrain(lin, cfg, ("batch", None)).reshape(B, S, K)
-    keep_k = keep.reshape(B, S, K)
-    b_idx = jnp.arange(B)[:, None]
-    buf = jnp.zeros((B, E * C + 1, D), x.dtype)
-    for k in range(K):
-        src = x * keep_k[..., k, None].astype(x.dtype)
-        src = constrain(src, cfg, ("batch", "seq", "d_model"))
-        buf = buf.at[b_idx, lin[:, :, k]].add(src)
-    buf = constrain(buf, cfg, ("batch", None, "d_model"))
-    buf = buf[:, :-1].reshape(B, E, C, D)
-    buf = constrain(buf, cfg, ("batch", "expert", None, "d_model"))
-
-    # expert FFN (SwiGLU)
-    h = jnp.einsum("becd,edf->becf", buf, p["wi"])
-    g = jnp.einsum("becd,edf->becf", buf, p["wg"])
-    h = jax.nn.silu(g) * h
-    h = constrain(h, cfg, ("batch", "expert", None, "d_ff"))
-    out = jnp.einsum("becf,efd->becd", h, p["wo"])
-    out = constrain(out, cfg, ("batch", "expert", None, "d_model"))
-
-    # combine: gather back (local), weight by gate values, K at a time
-    out = out.reshape(B, E * C, D)
-    out = constrain(out, cfg, ("batch", None, "d_model"))
-    gates_k = (keep_k * gate_vals.reshape(B, S, K)).astype(x.dtype)
-    y = jnp.zeros((B, S, D), x.dtype)
-    for k in range(K):
-        g_k = out[b_idx, jnp.minimum(lin[:, :, k], E * C - 1)]
-        g_k = constrain(g_k, cfg, ("batch", "seq", "d_model"))
-        y = y + g_k * gates_k[..., k, None]
-    y = constrain(y, cfg, ("batch", "seq", "d_model"))
+    # dispatch -> expert FFN -> combine through the kernel dispatcher; the
+    # callback re-applies this layer's sharding constraints inside the
+    # selected backend.
+    y = kernel_dispatch.call(
+        "moe_dispatch_combine", x, gate_vals, expert_idx,
+        p["wi"], p["wg"], p["wo"], capacity=C,
+        constrain=lambda a, dims: constrain(a, cfg, dims))
 
     # load-balancing aux loss (Switch/GShard)
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.int32)    # (B, S, K, E)
     frac_tokens = jnp.mean(onehot.sum(axis=2).astype(jnp.float32), axis=(0, 1))
     frac_probs = jnp.mean(probs, axis=(0, 1))
     aux = E * jnp.sum(frac_tokens * frac_probs) / K

@@ -176,30 +176,18 @@ def _causal_conv1d(x, w, b, state=None):
     return out, xp[:, -(k - 1):, :]
 
 
-def _make_mamba_step(A, Dskip):
-    """A: (di, N); Dskip: (di,).  The (B, di, N) discretized terms are
-    formed per step inside the scan — materializing them for the whole
-    sequence is O(S·di·N) and exactly what the fused selective-scan kernel
-    avoids."""
-
-    def step(h, xs):
-        dt, Bm, Cm, x1 = xs          # (B,di), (B,N), (B,N), (B,di)
-        dt = dt.astype(jnp.float32)  # xs stream in bf16; state math in f32
-        Bm = Bm.astype(jnp.float32)
-        Cm = Cm.astype(jnp.float32)
-        x1 = x1.astype(jnp.float32)
-        dtA = dt[..., None] * A      # (B, di, N)
-        h = jnp.exp(dtA) * h + (dt * x1)[..., None] * Bm[:, None, :]
-        y = jnp.einsum("bdn,bn->bd", h, Cm) + Dskip * x1
-        return h, y
-
-    return step
-
-
 def mamba_mix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
               state: dict | None = None, chunk: int = 64):
     """x: (B,S,D) -> (y, new_state).
-    state: {"conv": (B,k-1,di), "ssm": (B,di,N)}."""
+    state: {"conv": (B,k-1,di), "ssm": (B,di,N)}.
+
+    The selective-scan recurrence goes through the kernel dispatcher
+    (``mamba_scan``: fused Pallas kernel on TPU for the stateless training
+    form, chunk-checkpointed / associative scan elsewhere and whenever a
+    carried state is needed).  When called without ``state`` the returned
+    ``new_state["ssm"]`` is None — training discards it, and computing the
+    final state would force the scan backends even where the fused kernel
+    is eligible."""
     B, S, D = x.shape
     di, N = arch.d_inner, arch.ssm_state
     rank = p["dt_proj"].shape[0]
@@ -217,15 +205,16 @@ def mamba_mix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     A = -jnp.exp(p["A_log"])                                  # (di, N)
 
     # scan inputs stream in the activation dtype (bf16 on TPU); the state
-    # recurrence itself runs in f32 inside the step.
-    tm = lambda a: jnp.moveaxis(a, 1, 0)
-    h0 = (state["ssm"] if state is not None
-          else jnp.zeros((B, di, N), jnp.float32))
-    step = _make_mamba_step(A, p["D"])
-    hN, y = remat_time_scan(
-        step, h0, (tm(dt.astype(x.dtype)), tm(Bm), tm(Cm), tm(x1)),
-        chunk=chunk)
-    y = jnp.moveaxis(y, 0, 1).astype(x.dtype)                 # (B,S,di)
+    # recurrence itself runs in f32 inside the selected backend.
+    if state is not None:
+        y, hN = kernel_dispatch.call(
+            "mamba_scan", dt.astype(x.dtype), Bm, Cm, x1, A, p["D"],
+            chunk=chunk, initial_state=state["ssm"], return_state=True)
+    else:
+        y = kernel_dispatch.call(
+            "mamba_scan", dt.astype(x.dtype), Bm, Cm, x1, A, p["D"],
+            chunk=chunk)
+        hN = None
     y = y * jax.nn.silu(z)
     out = y @ p["out_proj"]
     out = constrain(out, cfg, ("batch", "seq", "d_model"))

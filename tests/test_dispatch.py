@@ -71,6 +71,24 @@ def test_cpu_large_shapes_fall_back_to_chunked_xla():
                            backend="ref").backend == "ref"
 
 
+def _mamba_args(B=1, S=32, di=8, N=4):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jax.nn.softplus(_rand(ks[0], (B, S, di)))
+    Bm, Cm = _rand(ks[1], (B, S, N)), _rand(ks[2], (B, S, N))
+    x = _rand(ks[3], (B, S, di))
+    A = -jnp.exp(_rand(ks[4], (di, N)) * 0.2)
+    return dt, Bm, Cm, x, A, jnp.ones((di,), jnp.float32)
+
+
+def _moe_args(B=1, S=32, D=8, E=4, K=2, F=16):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = _rand(ks[0], (B, S, D))
+    wi, wg = _rand(ks[1], (E, D, F)), _rand(ks[2], (E, D, F))
+    wo = _rand(ks[3], (E, F, D))
+    gv, ei = jax.lax.top_k(jax.nn.softmax(_rand(ks[4], (B, S, E))), K)
+    return x, gv, ei, wi, wg, wo
+
+
 def test_xla_override_registered_for_every_op():
     """--kernel-backend xla must not crash any op (serve/train advertise
     it); for decode/wkv6 it aliases the linear-memory reference."""
@@ -83,6 +101,21 @@ def test_xla_override_registered_for_every_op():
     r, kk, vv, w, u = _wkv_args()
     assert dispatch.select("wkv6", r, kk, vv, w, u,
                            backend="xla").backend == "xla"
+    assert dispatch.select("mamba_scan", *_mamba_args(),
+                           backend="xla").backend == "xla"
+    assert dispatch.select("moe_dispatch_combine", *_moe_args(),
+                           capacity=16, backend="xla").backend == "xla"
+
+
+def test_per_op_env_override_covers_new_ops(monkeypatch):
+    """REPRO_KERNEL_BACKEND_<OP> steers one op without touching others."""
+    monkeypatch.setenv(f"{dispatch.ENV_GLOBAL}_MAMBA_SCAN", "xla")
+    assert dispatch.select("mamba_scan", *_mamba_args()).backend == "xla"
+    q, k, v = _flash_args()
+    assert dispatch.select("flash_attention", q, k, v).backend != "xla"
+    monkeypatch.setenv(f"{dispatch.ENV_GLOBAL}_MOE_DISPATCH_COMBINE", "ref")
+    assert dispatch.select("moe_dispatch_combine", *_moe_args(),
+                           capacity=16).backend == "ref"
 
 
 def test_unknown_op_and_backend_raise():

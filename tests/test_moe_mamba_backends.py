@@ -1,0 +1,283 @@
+"""Backend agreement for the two newest dispatcher ops: ``mamba_scan``
+(selective-scan recurrence) and ``moe_dispatch_combine`` (token dispatch +
+expert FFN + combine), including the stateful decode path and the
+model-level wiring (``mamba_mix`` / ``moe_ffn`` call only the dispatcher).
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compat
+from repro.kernels import dispatch, ops
+
+TOL = 2e-5
+
+
+def _available(op):
+    """Backends of ``op`` eligible on this host for the given call."""
+    plat = compat.default_platform()
+    return sorted(b for b, impl in dispatch.backends(op).items()
+                  if "*" in impl.platforms or plat in impl.platforms)
+
+
+# --------------------------------------------------------------------------- #
+# mamba_scan
+# --------------------------------------------------------------------------- #
+def _mamba_args(B=2, S=64, di=16, N=8, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di))).astype(dtype)
+    Bm = jax.random.normal(ks[1], (B, S, N)).astype(dtype)
+    Cm = jax.random.normal(ks[2], (B, S, N)).astype(dtype)
+    x = jax.random.normal(ks[3], (B, S, di)).astype(dtype)
+    A = -jnp.exp(jax.random.normal(ks[4], (di, N)) * 0.2)
+    D = jnp.ones((di,), jnp.float32)
+    return dt, Bm, Cm, x, A, D
+
+
+def test_mamba_all_backends_agree_with_reference():
+    args = _mamba_args()
+    want = np.asarray(ops.mamba_scan(*args, chunk=16, backend="ref"),
+                      np.float32)
+    for b in _available("mamba_scan"):
+        got = np.asarray(ops.mamba_scan(*args, chunk=16, backend=b),
+                         np.float32)
+        np.testing.assert_allclose(got, want, atol=5 * TOL, rtol=5 * TOL,
+                                   err_msg=f"backend {b} vs ref")
+
+
+def test_mamba_xla_uneven_length_stays_chunked():
+    """S not divisible by chunk runs as full chunks + one short tail, and
+    still matches the sequential reference (stateless and stateful)."""
+    dt, Bm, Cm, x, A, D = _mamba_args(S=50)
+    want = np.asarray(ops.mamba_scan(dt, Bm, Cm, x, A, D, chunk=16,
+                                     backend="ref"), np.float32)
+    got = np.asarray(ops.mamba_scan(dt, Bm, Cm, x, A, D, chunk=16,
+                                    backend="xla"), np.float32)
+    np.testing.assert_allclose(got, want, atol=5 * TOL, rtol=5 * TOL)
+    _, s_ref = ops.mamba_scan(dt, Bm, Cm, x, A, D, chunk=16,
+                              return_state=True, backend="ref")
+    _, s_xla = ops.mamba_scan(dt, Bm, Cm, x, A, D, chunk=16,
+                              return_state=True, backend="xla")
+    np.testing.assert_allclose(np.asarray(s_xla), np.asarray(s_ref),
+                               atol=5 * TOL, rtol=5 * TOL)
+
+
+@pytest.mark.parametrize("backend", ["ref", "xla"])
+def test_mamba_carried_state_splits_sequence(backend):
+    """Running [0:S/2] then [S/2:S] with the carried state must equal one
+    full pass (the serve-path contract) on every stateful backend."""
+    dt, Bm, Cm, x, A, D = _mamba_args(S=64)
+    cut = lambda a, lo, hi: a[:, lo:hi]
+    full, s_full = ops.mamba_scan(dt, Bm, Cm, x, A, D, chunk=16,
+                                  return_state=True, backend=backend)
+    o1, s1 = ops.mamba_scan(*(cut(a, 0, 32) for a in (dt, Bm, Cm, x)),
+                            A, D, chunk=16, return_state=True,
+                            backend=backend)
+    o2, s2 = ops.mamba_scan(*(cut(a, 32, 64) for a in (dt, Bm, Cm, x)),
+                            A, D, chunk=16, initial_state=s1,
+                            return_state=True, backend=backend)
+    np.testing.assert_allclose(
+        np.asarray(jnp.concatenate([o1, o2], axis=1)), np.asarray(full),
+        atol=5 * TOL, rtol=5 * TOL)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=5 * TOL, rtol=5 * TOL)
+
+
+def test_mamba_stateful_form_falls_back_off_fused_kernel(monkeypatch):
+    """The Pallas/interpret kernel is stateless-only: a global backend
+    preference must fall back for the decode form, not crash."""
+    dt, Bm, Cm, x, A, D = _mamba_args()
+    s0 = jnp.zeros((dt.shape[0], dt.shape[2], Bm.shape[2]), jnp.float32)
+    monkeypatch.setenv(dispatch.ENV_GLOBAL, "interpret")
+    impl = dispatch.select("mamba_scan", dt, Bm, Cm, x, A, D, chunk=16,
+                           initial_state=s0, return_state=True)
+    assert impl.backend in ("ref", "xla")
+    with pytest.raises(ValueError):      # explicit backend= stays strict
+        dispatch.select("mamba_scan", dt, Bm, Cm, x, A, D, chunk=16,
+                        initial_state=s0, return_state=True,
+                        backend="interpret")
+
+
+def test_mamba_xla_backend_is_differentiable_and_agrees():
+    dt, Bm, Cm, x, A, D = _mamba_args(S=32)
+
+    def loss(b):
+        def f(xx):
+            return ops.mamba_scan(dt, Bm, Cm, xx, A, D, chunk=8,
+                                  backend=b).sum()
+        return jax.grad(f)(x)
+
+    np.testing.assert_allclose(np.asarray(loss("xla")),
+                               np.asarray(loss("ref")),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------------------------------------- #
+# moe_dispatch_combine
+# --------------------------------------------------------------------------- #
+def _moe_args(B=2, S=64, D=16, E=4, K=2, F=32, C=24, cap_tight=False):
+    ks = jax.random.split(jax.random.PRNGKey(4), 5)
+    x = jax.random.normal(ks[0], (B, S, D))
+    wi = jax.random.normal(ks[1], (E, D, F)) * 0.05
+    wg = jax.random.normal(ks[2], (E, D, F)) * 0.05
+    wo = jax.random.normal(ks[3], (E, F, D)) * 0.05
+    logits = jax.random.normal(ks[4], (B, S, E))
+    gv, ei = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), K)
+    gv = gv / jnp.maximum(gv.sum(-1, keepdims=True), 1e-9)
+    if cap_tight:  # force real token drops so drop semantics are compared
+        C = max(1, (S * K) // (E * 4))
+    return (x, gv, ei, wi, wg, wo), C
+
+
+@pytest.mark.parametrize("cap_tight", [False, True],
+                         ids=["no_drops", "with_drops"])
+def test_moe_all_backends_agree_with_reference(cap_tight):
+    args, C = _moe_args(cap_tight=cap_tight)
+    want = np.asarray(
+        ops.moe_dispatch_combine(*args, capacity=C, backend="ref"),
+        np.float32)
+    for b in _available("moe_dispatch_combine"):
+        got = np.asarray(
+            ops.moe_dispatch_combine(*args, capacity=C, backend=b),
+            np.float32)
+        np.testing.assert_allclose(got, want, atol=5 * TOL, rtol=5 * TOL,
+                                   err_msg=f"backend {b} vs ref")
+
+
+def test_moe_backends_agree_under_grad():
+    args, C = _moe_args()
+    x = args[0]
+
+    def gx(b):
+        def f(xx):
+            return ops.moe_dispatch_combine(
+                xx, *args[1:], capacity=C, backend=b).sum()
+        return np.asarray(jax.grad(f)(x))
+
+    want = gx("ref")
+    for b in _available("moe_dispatch_combine"):
+        np.testing.assert_allclose(gx(b), want, atol=1e-4, rtol=1e-4,
+                                   err_msg=f"backend {b} grad vs ref")
+
+
+@pytest.mark.skipif(compat.default_platform() != "cpu",
+                    reason="asserts CPU-host selection")
+def test_cpu_auto_selection_for_new_ops():
+    """CPU auto-selection: the production scatter path for MoE, the
+    chunk-checkpointed sequential scan for Mamba — never native pallas."""
+    args, C = _moe_args()
+    assert dispatch.select("moe_dispatch_combine", *args,
+                           capacity=C).backend == "xla"
+    margs = _mamba_args()
+    assert dispatch.select("mamba_scan", *margs).backend == "ref"
+    s0 = jnp.zeros((2, 16, 8), jnp.float32)
+    assert dispatch.select("mamba_scan", *margs, initial_state=s0,
+                           return_state=True).backend in ("ref", "xla")
+
+
+# --------------------------------------------------------------------------- #
+# model-level wiring: the hybrid decode path runs through the dispatcher
+# --------------------------------------------------------------------------- #
+def _tiny_hybrid_arch():
+    from repro import configs
+    from repro.launch.train import reduced_arch
+    arch = configs.get("jamba-1.5-large")
+    return reduced_arch(arch, 64, 0, 128, 4)
+
+
+def test_mamba_mix_stateful_decode_matches_full_pass():
+    """prefill(S) then per-token decode through ``mamba_mix`` must match
+    one full-length stateless pass — on every override that can serve the
+    stateful form."""
+    from repro.models import recurrent as Rc
+    from repro.models.plan import uniform_plan
+
+    arch = _tiny_hybrid_arch()
+    plan = uniform_plan(arch)
+    cfg = plan.segments[0].plan[0]["ssm"]
+    B, S = 2, 16
+    key = jax.random.PRNGKey(0)
+    p = Rc.init_mamba(key, arch, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1),
+                          (B, S, arch.d_model)) * 0.1
+
+    full, _ = Rc.mamba_mix(p, x, arch, cfg, chunk=8)
+    for backend in (None, "ref", "xla"):
+        with dispatch.force_backend(backend):
+            state = {"conv": jnp.zeros((B, arch.ssm_conv - 1, arch.d_inner)),
+                     "ssm": jnp.zeros((B, arch.d_inner, arch.ssm_state),
+                                      jnp.float32)}
+            outs = []
+            for t in range(S):
+                y, state = Rc.mamba_mix(p, x[:, t:t + 1], arch, cfg,
+                                        state=state, chunk=8)
+                outs.append(y)
+            got = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(full),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"override {backend}")
+
+
+def test_moe_ffn_agrees_across_forced_backends():
+    """``moe_ffn`` (routing + aux loss in the model, pipeline in the op)
+    must produce identical output under every eligible forced backend."""
+    from repro.models import moe as M
+    from repro.models.plan import uniform_plan
+
+    arch = _tiny_hybrid_arch()
+    assert arch.n_experts > 0
+    plan = uniform_plan(arch)
+    moe_cfg = None
+    for sub in plan.segments[0].plan:
+        if "moe" in sub:
+            moe_cfg = sub["moe"]
+            break
+    assert moe_cfg is not None
+    key = jax.random.PRNGKey(7)
+    p = M.init_moe(key, arch, jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (2, 32, arch.d_model))
+
+    y_ref, aux_ref = M.moe_ffn(p, x, arch, moe_cfg)
+    for backend in _available("moe_dispatch_combine"):
+        with dispatch.force_backend(backend):
+            y, aux = M.moe_ffn(p, x, arch, moe_cfg)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                                   atol=1e-4, rtol=1e-4,
+                                   err_msg=f"backend {backend}")
+        np.testing.assert_allclose(np.asarray(aux), np.asarray(aux_ref),
+                                   atol=1e-6, rtol=1e-6)
+
+
+# --------------------------------------------------------------------------- #
+# cost-model hooks for the new ops
+# --------------------------------------------------------------------------- #
+def test_cost_model_kernel_backend_hooks():
+    from repro.core.cost_model import CostModel
+    from repro.core.device import MeshSpec, AxisSpec, ICI_BW
+    from repro.models.arch import ShapeSpec
+    from repro.models.graph_export import export_graph
+
+    arch = _tiny_hybrid_arch()
+    shape = ShapeSpec("t", 128, 8, "train")
+    graph = export_graph(arch, shape)
+    mesh = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),))
+    nodes = {k: n for k, n in graph.nodes.items()
+             if n.kind in ("ssm", "moe")}
+    assert nodes, "hybrid graph must contain ssm and moe nodes"
+
+    from repro.core.config import LayerConfig
+
+    base = CostModel(mesh)
+    cfg = LayerConfig()
+    for name, node in nodes.items():
+        op = {"ssm": "mamba_scan", "moe": "moe_dispatch_combine"}[node.kind]
+        t0 = base.t_c(node, cfg)
+        fused = CostModel(mesh, kernel_backends={op: "pallas"}).t_c(node, cfg)
+        slow = CostModel(mesh, kernel_backends={op: "ref"}).t_c(node, cfg)
+        # fused <= production default <= reference fallback
+        assert fused <= t0 + 1e-12, (name, fused, t0)
+        assert slow > t0, (name, slow, t0)
