@@ -1,5 +1,7 @@
-"""Batched serving example: prefill a batch of prompts through a reduced
-qwen2.5 (GQA + QKV-bias) and greedy-decode continuations with the KV cache.
+"""Batched serving example: drive a request queue through the
+continuous-batching engine on a reduced qwen2.5 (GQA + QKV-bias) — 4
+cache slots, 8 requests, greedy decode with per-slot positions.  Add
+``--no-continuous`` for the lockstep static-batch oracle.
 
     PYTHONPATH=src python examples/serve_batched.py
 """

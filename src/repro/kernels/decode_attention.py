@@ -8,7 +8,10 @@ The GQA group dimension G becomes the *sublane* axis of the q tile —
 (G x D) @ (D x block_k) keeps the MXU busy even at q_len == 1, which a
 naive (1 x D) layout cannot.
 
-Layout: q (B, KH, G, D); k/v (B, KH, T, D); kv_len masks valid positions.
+Layout: q (B, KH, G, D); k/v (B, KH, T, D); kv_len masks valid positions —
+a scalar (every row at the same position) or a (B,) vector (per-slot
+positions, the continuous-batching serve engine's ragged decode: each
+cache slot carries its own request at its own depth).
 """
 
 from __future__ import annotations
@@ -29,7 +32,8 @@ NEG_INF = -1e30
 
 
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
-                   acc_ref, *, block_k: int, kv_steps: int, scale: float):
+                   acc_ref, *, block_k: int, kv_steps: int, scale: float,
+                   kv_heads: int):
     ki = pl.program_id(1)
 
     @pl.when(ki == 0)
@@ -38,7 +42,7 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    kv_len = len_ref[0]
+    kv_len = len_ref[pl.program_id(0) // kv_heads]
     k_start = ki * block_k
 
     @pl.when(k_start < kv_len)
@@ -70,8 +74,10 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                      kv_len, *, block_k: int = 512,
                      interpret: bool = False) -> jax.Array:
-    """q: (B, KH, G, D); k/v: (B, KH, T, D); kv_len: scalar int32.
-    Returns (B, KH, G, D)."""
+    """q: (B, KH, G, D); k/v: (B, KH, T, D); kv_len: scalar int32 or a
+    (B,) vector of per-slot valid lengths.  Returns (B, KH, G, D)."""
+    from .ref import normalize_kv_len
+
     B, KH, G, D = q.shape
     T = k.shape[2]
     block_k = min(block_k, T)
@@ -79,10 +85,10 @@ def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     kv_steps = T // block_k
     grid = (B * KH, kv_steps)
     scale = 1.0 / math.sqrt(D)
-    kv_len = jnp.asarray(kv_len, jnp.int32).reshape(1)
+    kv_len = normalize_kv_len(kv_len, B)
 
     kernel = functools.partial(_decode_kernel, block_k=block_k,
-                               kv_steps=kv_steps, scale=scale)
+                               kv_steps=kv_steps, scale=scale, kv_heads=KH)
 
     return pl.pallas_call(
         kernel,

@@ -25,6 +25,7 @@ Ops registered by the sibling modules (canonical layouts/signatures):
       q: (B, H, S, D); k/v: (B, KH, T, D) -> (B, H, S, D)
   decode_attention(q, k, v, kv_len, *, block_k)
       q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)
+      kv_len: scalar or (B,) per-slot valid lengths (continuous batching)
   wkv6(r, k, v, w, u, *, chunk, initial_state, return_state)
       r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N) [, (B, H, N, N)]
   mamba_scan(dt, B, C, x, A, D, *, chunk, initial_state, return_state)

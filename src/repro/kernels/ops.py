@@ -62,7 +62,8 @@ def _decode(q, k, v, kv_len, *, block_k, backend):
 def decode_attention(q, k, v, kv_len, *, block_k: int | None = None,
                      interpret: bool | None = None,
                      backend: str | None = None):
-    """q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)."""
+    """q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D).
+    kv_len: scalar (shared position) or (B,) per-slot valid lengths."""
     impl = dispatch.select("decode_attention", q, k, v, kv_len,
                            block_k=block_k,
                            backend=_resolve(backend, interpret))

@@ -35,16 +35,34 @@ def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
     return o.reshape(B, H, S, D).astype(q.dtype)
 
 
+def normalize_kv_len(kv_len, batch: int) -> jax.Array:
+    """Normalize the ``decode_attention`` valid-length argument to a
+    ``(B,)`` int32 vector: a scalar broadcasts (every row at the same
+    position — the static-batch form), a ``(B,)`` vector passes through
+    per-slot (continuous batching).  Anything else is rejected loudly —
+    a silently broadcast wrong shape means wrong masking."""
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.ndim == 0:
+        return jnp.broadcast_to(kv_len, (batch,))
+    if kv_len.shape == (batch,):
+        return kv_len
+    raise ValueError(
+        f"decode_attention kv_len must be a scalar or a ({batch},) vector "
+        f"matching the batch; got shape {kv_len.shape}")
+
+
 def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                          kv_len: jax.Array | int) -> jax.Array:
-    """q: (B, H, D); k/v: (B, KH, T, D); attends to positions < kv_len."""
+    """q: (B, H, D); k/v: (B, KH, T, D); kv_len: scalar or (B,) — row b
+    attends to positions < kv_len[b]."""
     B, H, D = q.shape
     _, KH, T, _ = k.shape
     G = H // KH
+    kv_len = normalize_kv_len(kv_len, B)
     qg = q.reshape(B, KH, G, D)
     s = jnp.einsum("bkgd,bktd->bkgt", qg.astype(jnp.float32),
                    k.astype(jnp.float32)) / math.sqrt(D)
-    valid = jnp.arange(T)[None, None, None, :] < kv_len
+    valid = jnp.arange(T)[None, None, None, :] < kv_len[:, None, None, None]
     s = jnp.where(valid, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))

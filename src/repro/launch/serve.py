@@ -1,7 +1,21 @@
-"""Batched serving driver: prefill a batch of prompts, then greedy-decode.
+"""Serving driver: request queue in, completions out.
+
+Decoder-only LMs run through the continuous-batching engine
+(``repro.serve.ServeEngine``): a fixed pool of ``--batch`` cache slots,
+requests admitted into free slots mid-decode, ragged single-token decode
+with per-slot positions, slots retired on EOS / max-tokens.
+``--no-continuous`` keeps the lockstep static-batch oracle (admit a full
+batch, drain it, admit the next) for A/B comparison.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
-        --width 256 --depth 4 --batch 4 --prompt-len 64 --gen 32
+        --width 256 --depth 4 --batch 4 --requests 8 \
+        --prompt-len 64 --gen 32
+
+Both jitted fns are warmed up on a dummy step before anything is timed
+and compile seconds are reported separately — reported tok/s is steady
+state, not steady state diluted by jit compilation.  The encoder-decoder
+arch (seamless) keeps a static lockstep loop (its cache carries a
+non-slot-shaped memory leaf), with the same warm-up discipline.
 """
 
 from __future__ import annotations
@@ -17,17 +31,82 @@ from repro import configs
 from repro.data import make_dataset
 from repro.models import model_module, uniform_plan
 from repro.models.arch import ShapeSpec
+from repro.serve import Request, ServeEngine
 from repro.train import make_serve_fns
 
 from .train import reduced_arch
 
 
+def _serve_encdec(args, arch, plan) -> None:
+    """Legacy lockstep path for the encoder-decoder arch."""
+    mod = model_module(arch)
+    max_len = args.prompt_len + args.gen
+    params = mod.init_encdec(jax.random.PRNGKey(0), arch, jnp.float32)
+    shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
+    ds = make_dataset(arch, shape)
+    batch = jax.tree.map(jnp.asarray, ds.batch_at(0))
+    enc_len = batch["frames"].shape[1]
+
+    prefill_jit, decode_jit = make_serve_fns(
+        arch, plan, q_chunk=256, kernel_backend=args.kernel_backend or None,
+        jit=True)
+
+    def fresh_cache():
+        return mod.init_cache(arch, args.batch, max_len, jnp.float32,
+                              enc_len=enc_len)
+
+    # warm up (compile) both fns on throwaway caches before timing
+    t0 = time.time()
+    logits, warm = prefill_jit(params, batch, fresh_cache())
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    logits, warm = decode_jit(params, tok, warm, jnp.int32(args.prompt_len))
+    jax.block_until_ready(logits)
+    t_compile = time.time() - t0
+
+    t0 = time.time()
+    logits, cache = prefill_jit(params, batch, fresh_cache())
+    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+    jax.block_until_ready(tok)
+    t_prefill = time.time() - t0
+
+    out = [tok]
+    # the encdec dataset halves --prompt-len between encoder frames and
+    # decoder tokens; rate math must use the actual decoder prompt length
+    pos = batch["tokens"].shape[1]
+    t0 = time.time()
+    for i in range(args.gen - 1):
+        logits, cache = decode_jit(params, tok, cache, jnp.int32(pos + i))
+        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    jax.block_until_ready(tok)
+    t_decode = time.time() - t0
+
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    print(f"arch={arch.name} batch={args.batch} prompt={pos} "
+          f"gen={args.gen} mode=static(encdec)")
+    print(f"compile: {t_compile:.2f} s (excluded from the rates below)")
+    print(f"prefill: {t_prefill*1e3:.1f} ms "
+          f"({args.batch*pos/max(t_prefill,1e-9):.0f} tok/s)")
+    print(f"decode:  {t_decode*1e3:.1f} ms "
+          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
+    print("sample generations (token ids):")
+    for row in gen[:2]:
+        print("  ", row[:24].tolist())
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="cache slot pool size (max in-flight requests)")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="number of requests to serve (default 2x --batch)")
     ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=32,
+                    help="max new tokens per request")
+    ap.add_argument("--no-continuous", action="store_true",
+                    help="static-batch oracle: admit a full batch, drain "
+                         "it, admit the next (the pre-engine lockstep)")
     ap.add_argument("--width", type=int, default=256)
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--vocab", type=int, default=512)
@@ -51,49 +130,54 @@ def main() -> None:
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
                         args.vocab, args.experts)
-    mod = model_module(arch)
     plan = uniform_plan(arch)
-    max_len = args.prompt_len + args.gen
+    if arch.enc_layers:
+        _serve_encdec(args, arch, plan)
+        return
 
-    init = mod.init_encdec if arch.enc_layers else mod.init_lm
-    params = init(jax.random.PRNGKey(0), arch, jnp.float32)
+    mod = model_module(arch)
+    n_requests = args.requests or 2 * args.batch
+    max_len = args.prompt_len + args.gen
+    params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
     ds = make_dataset(arch, shape)
-    batch = jax.tree.map(jnp.asarray, ds.batch_at(0))
+    prompts = []
+    for i in range(-(-n_requests // args.batch)):
+        prompts.extend(np.asarray(ds.batch_at(i)["tokens"]))
+    requests = [Request(uid=i, prompt=prompts[i][:args.prompt_len],
+                        max_new_tokens=args.gen)
+                for i in range(n_requests)]
 
-    kw = {"enc_len": batch["frames"].shape[1]} if arch.enc_layers else {}
-    cache = mod.init_cache(arch, args.batch, max_len, jnp.float32, **kw)
-    prefill_fn, decode_fn = make_serve_fns(
-        arch, plan, q_chunk=256, kernel_backend=args.kernel_backend or None)
-    prefill_jit = jax.jit(prefill_fn)
-    decode_jit = jax.jit(decode_fn, donate_argnums=(2,))
+    mode = "static" if args.no_continuous else "continuous"
+    engine = ServeEngine(
+        params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
+        q_chunk=256, kernel_backend=args.kernel_backend or None,
+        policy=mode)
+    # warm up on the *actual* request prompt lengths — for frontend (VLM)
+    # archs the dataset emits prompts shorter than --prompt-len, and a
+    # mis-bucketed warmup would push the real prefill compile back into
+    # the timed path
+    t_compile = engine.warmup(sorted({len(r.prompt) for r in requests}))
 
     t0 = time.time()
-    logits, cache = prefill_jit(params, batch, cache)
-    tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-    jax.block_until_ready(tok)
-    t_prefill = time.time() - t0
+    completions = engine.run(requests)
+    wall = time.time() - t0
 
-    out = [tok]
-    pos = batch["tokens"].shape[1]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, cache = decode_jit(params, tok, cache, jnp.int32(pos + i))
-        tok = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
-
-    gen = np.asarray(jnp.concatenate(out, axis=1))
-    print(f"arch={arch.name} batch={args.batch} prompt={args.prompt_len} "
-          f"gen={args.gen}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms "
-          f"({args.batch*args.prompt_len/t_prefill:.0f} tok/s)")
-    print(f"decode:  {t_decode*1e3:.1f} ms "
-          f"({args.batch*(args.gen-1)/max(t_decode,1e-9):.0f} tok/s)")
+    s = engine.stats
+    out_tokens = sum(len(c.tokens) for c in completions)
+    print(f"arch={arch.name} slots={args.batch} requests={n_requests} "
+          f"prompt={args.prompt_len} gen<={args.gen} mode={mode}")
+    print(f"compile: {t_compile:.2f} s (excluded from the rates below)")
+    print(f"prefill: {s['prefill_s']*1e3:.1f} ms "
+          f"({s['prefill_tokens']/max(s['prefill_s'],1e-9):.0f} tok/s)")
+    print(f"decode:  {s['decode_s']*1e3:.1f} ms over "
+          f"{int(s['decode_steps'])} ragged steps "
+          f"({s['decode_tokens']/max(s['decode_s'],1e-9):.0f} tok/s)")
+    print(f"end-to-end: {out_tokens} output tokens in {wall*1e3:.1f} ms "
+          f"({out_tokens/max(wall,1e-9):.0f} tok/s)")
     print("sample generations (token ids):")
-    for row in gen[:2]:
-        print("  ", row[:24].tolist())
+    for c in sorted(completions, key=lambda c: c.uid)[:2]:
+        print(f"  uid={c.uid} [{c.finish_reason}]", c.tokens[:24])
 
 
 if __name__ == "__main__":

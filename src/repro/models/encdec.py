@@ -118,10 +118,10 @@ def decode_step(params, token: jax.Array, cache: dict, pos,
     memory = cache["memory"]
     mpos = jnp.arange(memory.shape[1])
     h = L.embed(params["embed"], token, plan.embed)
-    positions = jnp.asarray(pos)[None]
+    positions, cache_pos = lm.decode_positions(pos, token.shape[0])
     h, _, cache_dec = lm.run_stack(
         h, params["stack"], arch, plan.segments, positions=positions,
-        causal=True, cache=cache["dec"], cache_pos=pos,
+        causal=True, cache=cache["dec"], cache_pos=cache_pos,
         memory=(memory, mpos), remat=False)
     h = L.apply_norm(params["final_norm"], h)
     logits = L.lm_head(params["lm_head"], h, params["embed"], arch,

@@ -112,7 +112,11 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     (batch, seq, heads) output of the core (the searched config).
 
     kv_cache: {"k": (B, Smax, KH, D), "v": ...} — decode path updates it at
-    ``cache_pos`` and attends over the full cache.
+    ``cache_pos`` and attends over the full cache.  ``cache_pos`` is a
+    scalar (all rows at the same depth) or, for single-token decode, a
+    (B,) vector of per-slot positions (continuous batching: each cache
+    slot carries its own request), in which case ``positions`` is (B, 1)
+    and the write is a per-row scatter at ``cache_pos[b]``.
     kv_override: (k, v, kv_positions) for cross-attention.
     Returns (attn_out_(B,S,H,D), new_cache).
     """
@@ -142,8 +146,20 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     new_cache = None
     if kv_cache is not None:
         ck, cv = kv_cache["k"], kv_cache["v"]
-        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cache_pos, axis=1)
+        if getattr(cache_pos, "ndim", 0) == 1:
+            # per-slot positions: scatter row b's token at cache_pos[b]
+            if S != 1:
+                raise ValueError(
+                    "per-slot cache_pos requires single-token decode "
+                    f"(got S={S})")
+            rows = jnp.arange(B)
+            ck = ck.at[rows, cache_pos].set(k[:, 0].astype(ck.dtype))
+            cv = cv.at[rows, cache_pos].set(v[:, 0].astype(cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), cache_pos, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), cache_pos, axis=1)
         new_cache = {"k": ck, "v": cv}
         k, v = ck, cv
         kv_positions = jnp.arange(ck.shape[1])
@@ -177,10 +193,10 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         if kv_cache is not None and S == 1:
             # single-token decode over the cache: split-KV kernel with the
             # GQA group as the q sublane axis (head h -> kv head h // G),
-            # valid positions < pos + 1
+            # valid positions < pos + 1 — per slot when positions is (B, 1)
             qg = q.reshape(B, kh, H // kh, hd)             # (B, KH, G, D)
             o = kernel_dispatch.call("decode_attention", qg, kt, vt,
-                                     positions[0] + 1)
+                                     positions[..., -1] + 1)
             o = o.reshape(B, 1, H, hd)
         else:
             o = kernel_dispatch.call(

@@ -397,16 +397,41 @@ def prefill(params, batch: dict, cache: dict, arch: ArchConfig,
     return logits, cache
 
 
+def decode_positions(pos, batch: int):
+    """Normalize a decode ``pos`` argument -> (rope_positions, cache_pos).
+
+    Accepted forms:
+      * scalar — every row sits at the same position (the static-batch
+        lockstep form); rope positions are (1,), broadcast over batch.
+      * ``(batch,)`` vector — per-slot positions (continuous batching:
+        each cache slot carries its own request at its own depth); rope
+        positions are (B, 1) and cache writes scatter at ``pos[b]``.
+
+    Anything else is rejected loudly: the old behaviour silently accepted
+    a ``(B,)`` array and built shape-(1, B) positions via
+    ``jnp.asarray(pos)[None]``, producing wrong RoPE angles for every row.
+    """
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        return pos[None], pos
+    if pos.ndim == 1 and pos.shape[0] == batch:
+        return pos[:, None], pos
+    raise ValueError(
+        f"decode pos must be a scalar or a ({batch},) vector matching the "
+        f"token batch; got shape {pos.shape}")
+
+
 def decode_step(params, token: jax.Array, cache: dict, pos,
                 arch: ArchConfig, plan: ModelPlan | None = None):
     """One decode step.  token: (B, 1) int32; pos: scalar int32 (current
-    position = number of tokens already in the cache)."""
+    position = number of tokens already in the cache) or a (B,) vector of
+    per-slot positions (see :func:`decode_positions`)."""
     plan = plan if plan is not None else uniform_plan(arch)
     h = L.embed(params["embed"], token, plan.embed)
-    positions = jnp.asarray(pos)[None]
+    positions, cache_pos = decode_positions(pos, token.shape[0])
     h, _, cache = run_stack(h, params["stack"], arch, plan.segments,
                             positions=positions, causal=True, cache=cache,
-                            cache_pos=pos, remat=False)
+                            cache_pos=cache_pos, remat=False)
     h = L.apply_norm(params["final_norm"], h)
     h = constrain(h, plan.final_norm, ("batch", "seq", "d_model"))
     logits = L.lm_head(params["lm_head"], h, params["embed"], arch,

@@ -1,0 +1,8 @@
+"""Continuous-batching serving subsystem (slot-pooled KV cache, per-slot
+decode positions, admit/retire mid-decode)."""
+
+from .engine import ServeEngine, write_slot
+from .scheduler import Completion, Request, SlotScheduler, SlotState
+
+__all__ = ["Completion", "Request", "ServeEngine", "SlotScheduler",
+           "SlotState", "write_slot"]

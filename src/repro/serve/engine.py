@@ -1,0 +1,221 @@
+"""Continuous-batching serve engine: slot-pooled KV cache, per-slot
+decode positions, admit/retire mid-decode.
+
+The paper's thesis is that one global parallelization strategy wastes
+hardware because different layers want different dimensions; the old
+serving path made the same mistake in *time* — every request in a batch
+was forced into lockstep prefill->decode behind a single scalar position,
+so short requests padded out to the longest and freed cache slots sat
+idle.  The per-slot ``kv_len`` masking of the FlashDecoding-style kernel
+(arXiv:2311.01282) makes ragged decode a *scheduling* problem, not a
+kernel problem; this engine is that scheduler:
+
+* a fixed pool of ``max_batch`` cache slots (rows of one pooled KV /
+  recurrent-state tree, allocated once up front);
+* queued requests are prefilled at their exact prompt length (batch 1)
+  and their cache row scattered into a free slot (:func:`write_slot`
+  overwrites the *entire* row, so a retired request's KV and mamba/wkv6
+  state can never leak into its successor);
+* every decode step runs all ``max_batch`` slots as one ragged
+  single-token batch with per-slot positions ``(B,)`` — each row RoPE'd,
+  cache-scattered and length-masked at its own depth;
+* slots retire on EOS or ``max_new_tokens`` and immediately take new
+  work (policy "continuous") or wait for the pool to drain (policy
+  "static", the lockstep oracle).
+
+Decode steps of free slots run as padding rows: their outputs are
+ignored and their rows fully overwritten at the next admission, which
+keeps every decode call the same shape (one compiled trace).
+
+Scope: decoder-only LMs (``repro.models.lm`` — dense / MoE / RWKV /
+Mamba-hybrid / VLM text path).  The encoder-decoder arch keeps the
+static driver path (its cache carries a (B, enc_len, D) memory leaf that
+is not slot-shaped).
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model_module
+from repro.models.arch import ArchConfig
+from repro.models.plan import ModelPlan
+from repro.train import make_serve_fns
+
+from .scheduler import Completion, Request, SlotScheduler
+
+
+def write_slot(pool: dict, row: dict, slot) -> dict:
+    """Overwrite slot ``slot`` of the pooled cache with a batch-1 cache.
+
+    Every leaf is (n_units, B, ...) vs (n_units, 1, ...); the whole row is
+    replaced — including KV positions beyond the new request's prompt and
+    the recurrent (mamba / wkv6) state — so nothing of the slot's previous
+    occupant survives admission.
+    """
+    return jax.tree.map(
+        lambda p, r: p.at[:, slot].set(r[:, 0].astype(p.dtype)), pool, row)
+
+
+class ServeEngine:
+    """Drives generation over a slot-pooled cache.
+
+    Usage::
+
+        engine = ServeEngine(params, arch, max_batch=8, max_len=4096)
+        engine.warmup([64, 128])          # compile outside the timed path
+        completions = engine.run(requests)
+
+    or incrementally (``submit`` between ``step`` calls admits mid-decode
+    under the continuous policy)::
+
+        engine.submit(req)
+        while engine.busy:
+            for c in engine.step(): ...
+    """
+
+    def __init__(self, params, arch: ArchConfig, *, max_batch: int,
+                 max_len: int, plan: ModelPlan | None = None,
+                 q_chunk: int = 256, kernel_backend: str | None = None,
+                 dtype=jnp.float32, policy: str = "continuous"):
+        if arch.enc_layers:
+            raise NotImplementedError(
+                "ServeEngine covers decoder-only LMs; encoder-decoder "
+                "serving uses the static driver path")
+        self.params = params
+        self.arch = arch
+        self.max_batch = int(max_batch)
+        self.max_len = int(max_len)
+        self.dtype = dtype
+        self._mod = model_module(arch)
+        self._prefill, self._decode = make_serve_fns(
+            arch, plan, q_chunk=q_chunk, kernel_backend=kernel_backend,
+            jit=True)
+        self._write = jax.jit(write_slot, donate_argnums=(0,))
+        self.cache = self._mod.init_cache(arch, self.max_batch, self.max_len,
+                                          dtype)
+        self.scheduler = SlotScheduler(self.max_batch, policy)
+        self.queue: deque[Request] = deque()
+        self._tok = np.zeros((self.max_batch,), np.int32)
+        self._pos = np.zeros((self.max_batch,), np.int32)
+        self.stats: dict[str, float] = {
+            "compile_s": 0.0, "prefill_s": 0.0, "prefill_tokens": 0,
+            "decode_s": 0.0, "decode_steps": 0, "decode_tokens": 0,
+            "admitted": 0, "retired": 0,
+        }
+
+    # ---------------------------------------------------------------- #
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or bool(self.scheduler.active)
+
+    def submit(self, request: Request) -> None:
+        if len(request.prompt) + request.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {request.uid}: prompt ({len(request.prompt)}) + "
+                f"max_new_tokens ({request.max_new_tokens}) exceeds the "
+                f"cache pool length {self.max_len}")
+        self.queue.append(request)
+
+    def warmup(self, prompt_lens=()) -> float:
+        """Compile prefill (one trace per distinct prompt length), the
+        ragged decode step and the slot write *before* anything is timed;
+        returns the seconds spent (jit compile + first run).  The dummy
+        traffic flows through the engine's own pool — harmless, since
+        admission overwrites the whole slot row and free rows are never
+        read."""
+        t0 = time.perf_counter()
+        for plen in sorted({int(p) for p in prompt_lens}):
+            row = self._mod.init_cache(self.arch, 1, self.max_len, self.dtype)
+            logits, row = self._prefill(
+                self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)}, row)
+            self.cache = self._write(self.cache, row, 0)
+            # exercise the full sampling hot path — the eager argmax /
+            # host transfer compiles too, and must not be charged to the
+            # first request served
+            int(jax.device_get(jnp.argmax(logits[0, -1])))
+        logits, self.cache = self._decode(
+            self.params, jnp.zeros((self.max_batch, 1), jnp.int32),
+            self.cache, jnp.zeros((self.max_batch,), jnp.int32))
+        np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)), np.int32)
+        dt = time.perf_counter() - t0
+        self.stats["compile_s"] += dt
+        return dt
+
+    # ---------------------------------------------------------------- #
+    def _admit_one(self) -> list[Completion]:
+        req = self.queue.popleft()
+        slot = self.scheduler.admit(req)
+        t0 = time.perf_counter()
+        tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        row = self._mod.init_cache(self.arch, 1, self.max_len, self.dtype)
+        logits, row = self._prefill(self.params, {"tokens": tokens}, row)
+        self.cache = self._write(self.cache, row, slot)
+        first = int(jax.device_get(jnp.argmax(logits[0, -1])))
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefill_tokens"] += len(req.prompt)
+        self.stats["admitted"] += 1
+        st = self.scheduler.state(slot)
+        st.generated.append(first)
+        self._tok[slot] = first
+        self._pos[slot] = st.pos
+        return self._maybe_retire(slot)
+
+    def _maybe_retire(self, slot: int) -> list[Completion]:
+        st = self.scheduler.state(slot)
+        req = st.request
+        reason = None
+        if req.eos_id is not None and st.generated[-1] == req.eos_id:
+            reason = "eos"
+        elif len(st.generated) >= req.max_new_tokens:
+            reason = "length"
+        elif st.pos >= self.max_len:      # defensive: cache row exhausted
+            reason = "length"
+        if reason is None:
+            return []
+        self.scheduler.retire(slot)
+        self._tok[slot] = 0
+        self._pos[slot] = 0               # free rows park their (ignored)
+        self.stats["retired"] += 1        # writes at position 0
+        return [Completion(uid=req.uid, tokens=list(st.generated),
+                           prompt_len=len(req.prompt), finish_reason=reason)]
+
+    def step(self) -> list[Completion]:
+        """Admit every admissible queued request, then run one ragged
+        decode step over the pool; returns the requests that finished."""
+        done: list[Completion] = []
+        for _ in range(self.scheduler.admissible(len(self.queue))):
+            done.extend(self._admit_one())
+        active = self.scheduler.active
+        if active:
+            t0 = time.perf_counter()
+            logits, self.cache = self._decode(
+                self.params, jnp.asarray(self._tok)[:, None], self.cache,
+                jnp.asarray(self._pos))
+            nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
+                             np.int32)
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["decode_steps"] += 1
+            self.stats["decode_tokens"] += len(active)
+            for slot, st in active.items():
+                tok = int(nxt[slot])
+                st.generated.append(tok)
+                st.pos += 1
+                self._tok[slot] = tok
+                self._pos[slot] = st.pos
+                done.extend(self._maybe_retire(slot))
+        return done
+
+    def run(self, requests=()) -> list[Completion]:
+        """Submit ``requests`` and drive until the queue and pool drain."""
+        for req in requests:
+            self.submit(req)
+        done: list[Completion] = []
+        while self.busy:
+            done.extend(self.step())
+        return done

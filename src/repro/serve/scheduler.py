@@ -1,0 +1,117 @@
+"""Slot scheduling for the continuous-batching serve engine.
+
+The engine owns a fixed pool of ``max_batch`` cache slots (rows of the
+pooled KV / recurrent-state cache); this module owns the host-side
+bookkeeping of which slot holds which request.  Two admission policies:
+
+* ``"continuous"`` — a queued request is admitted the moment any slot is
+  free, mid-decode of everything else (continuous batching: short
+  requests retire early and their slots immediately take new work).
+* ``"static"`` — requests are admitted only when the *whole* pool is
+  drained, in arrival-order batches of up to ``max_batch`` (the lockstep
+  prefill->decode oracle the old driver implemented; kept behind
+  ``--no-continuous`` as the equivalence/throughput baseline).
+
+Everything here is pure Python — no jax.  The device-side work (prefill,
+per-slot decode, slot writes) lives in :mod:`repro.serve.engine`.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class Request:
+    """One generation request.
+
+    ``max_new_tokens`` counts every generated token, including the one
+    sampled from the prefill logits; generation stops early when
+    ``eos_id`` is produced (the EOS token is included in the output).
+    """
+    uid: int
+    prompt: tuple[int, ...]
+    max_new_tokens: int
+    eos_id: int | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "prompt",
+                           tuple(int(t) for t in self.prompt))
+        if not self.prompt:
+            raise ValueError(f"request {self.uid}: empty prompt")
+        if self.max_new_tokens < 1:
+            raise ValueError(f"request {self.uid}: max_new_tokens must "
+                             f"be >= 1, got {self.max_new_tokens}")
+
+
+@dataclass
+class Completion:
+    uid: int
+    tokens: list[int]
+    prompt_len: int
+    finish_reason: str            # "eos" | "length"
+
+
+@dataclass
+class SlotState:
+    """Device-slot bookkeeping for one in-flight request: ``pos`` is the
+    next cache write position (== tokens currently in the slot's cache
+    row), ``generated`` the tokens sampled so far."""
+    request: Request
+    pos: int
+    generated: list[int] = field(default_factory=list)
+
+
+class SlotScheduler:
+    """Assigns queued requests to free cache slots under a policy."""
+
+    POLICIES = ("continuous", "static")
+
+    def __init__(self, max_batch: int, policy: str = "continuous"):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if policy not in self.POLICIES:
+            raise ValueError(f"unknown policy {policy!r}; "
+                             f"expected one of {self.POLICIES}")
+        self.max_batch = max_batch
+        self.policy = policy
+        self._slots: list[SlotState | None] = [None] * max_batch
+
+    # ---------------------------------------------------------------- #
+    @property
+    def active(self) -> dict[int, SlotState]:
+        """slot -> state for every occupied slot (ascending slot order)."""
+        return {i: s for i, s in enumerate(self._slots) if s is not None}
+
+    def free_slots(self) -> list[int]:
+        return [i for i, s in enumerate(self._slots) if s is None]
+
+    def state(self, slot: int) -> SlotState:
+        st = self._slots[slot]
+        if st is None:
+            raise KeyError(f"slot {slot} is free")
+        return st
+
+    # ---------------------------------------------------------------- #
+    def admissible(self, queued: int) -> int:
+        """How many of ``queued`` waiting requests may be admitted now."""
+        free = len(self.free_slots())
+        if self.policy == "continuous":
+            return min(free, queued)
+        # static: only form a fresh batch once the pool is fully drained
+        return min(free, queued) if free == self.max_batch else 0
+
+    def admit(self, request: Request) -> int:
+        """Place ``request`` in the lowest free slot; returns the slot."""
+        free = self.free_slots()
+        if not free:
+            raise RuntimeError("no free slot")
+        slot = free[0]
+        self._slots[slot] = SlotState(request=request, pos=len(request.prompt))
+        return slot
+
+    def retire(self, slot: int) -> SlotState:
+        """Free ``slot``; returns its final state."""
+        st = self.state(slot)
+        self._slots[slot] = None
+        return st

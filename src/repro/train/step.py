@@ -99,7 +99,20 @@ def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
 
 
 def make_serve_fns(arch: ArchConfig, plan: ModelPlan | None = None,
-                   q_chunk: int = 512, kernel_backend: str | None = None):
+                   q_chunk: int = 512, kernel_backend: str | None = None,
+                   *, jit: bool = False):
+    """Build ``(prefill, decode_step)``.
+
+    ``decode_step`` takes ``pos`` as a scalar (static lockstep batch) or a
+    ``(B,)`` vector of per-slot positions (the continuous-batching serve
+    engine's ragged decode).
+
+    With ``jit=True`` both come back jitted with the cache argument
+    donated.  Donating *prefill*'s cache matters as much as decode's: the
+    cache arrives freshly initialized and without donation peak HBM holds
+    two full KV pools (the zeros plus the filled copy) for the whole
+    prefill.
+    """
     plan = plan if plan is not None else uniform_plan(arch)
     mod = model_module(arch)
 
@@ -112,4 +125,7 @@ def make_serve_fns(arch: ArchConfig, plan: ModelPlan | None = None,
         with kernel_dispatch.force_backend(kernel_backend):
             return mod.decode_step(params, token, cache, pos, arch, plan)
 
-    return prefill, decode_step
+    if not jit:
+        return prefill, decode_step
+    return (jax.jit(prefill, donate_argnums=(2,)),
+            jax.jit(decode_step, donate_argnums=(2,)))

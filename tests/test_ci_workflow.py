@@ -51,7 +51,12 @@ def test_workflow_test_job_runs_tier1_on_jax_matrix():
 def test_workflow_bench_job_uploads_artifact():
     wf = _load()
     job = wf["jobs"]["bench-smoke"]
-    assert "benchmarks.perf_iterations" in _all_run_lines(job)
+    runs = _all_run_lines(job)
+    assert "benchmarks.perf_iterations" in runs
+    # the serving perf trajectory rides the same job/artifact: continuous
+    # vs static-oracle throughput lands in BENCH_serving.json
+    assert "benchmarks.serving_throughput" in runs
+    assert "BENCH_serving.json" in runs
     uploads = [s for s in job["steps"]
                if str(s.get("uses", "")).startswith("actions/upload-artifact")]
     assert uploads and "BENCH_" in uploads[0]["with"]["path"]

@@ -61,6 +61,37 @@ def test_decode_attention(B, KH, G, T, D, dtype, frac):
         atol=TOL[dtype], rtol=TOL[dtype])
 
 
+def test_decode_attention_per_slot_kv_len():
+    """kv_len as a (B,) vector (continuous batching: each cache slot at
+    its own depth) masks each row independently — row b must equal a
+    batch-1 call with scalar kv_len[b], on both ref and interpret."""
+    B, KH, G, T, D = 3, 2, 4, 256, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = _rand(ks[0], (B, KH, G, D), jnp.float32)
+    k = _rand(ks[1], (B, KH, T, D), jnp.float32)
+    v = _rand(ks[2], (B, KH, T, D), jnp.float32)
+    lens = jnp.asarray([3, 256, 117], jnp.int32)
+    for backend in ("ref", "interpret"):
+        out = ops.decode_attention(q, k, v, lens, backend=backend)
+        for b in range(B):
+            want = ops.decode_attention(q[b:b + 1], k[b:b + 1], v[b:b + 1],
+                                        int(lens[b]), backend=backend)
+            np.testing.assert_allclose(
+                np.asarray(out[b], np.float32),
+                np.asarray(want[0], np.float32), atol=2e-5, rtol=2e-5)
+
+
+def test_decode_attention_rejects_malformed_kv_len():
+    B, KH, G, T, D = 2, 1, 4, 64, 32
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = _rand(ks[0], (B, KH, G, D), jnp.float32)
+    k = _rand(ks[1], (B, KH, T, D), jnp.float32)
+    v = _rand(ks[2], (B, KH, T, D), jnp.float32)
+    for bad in (jnp.zeros((B + 1,), jnp.int32), jnp.zeros((B, 1), jnp.int32)):
+        with pytest.raises(ValueError, match="kv_len"):
+            ops.decode_attention(q, k, v, bad, backend="ref")
+
+
 @pytest.mark.parametrize("B,H,T,N", [
     (1, 2, 128, 64),
     (2, 4, 256, 64),

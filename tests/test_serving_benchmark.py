@@ -1,0 +1,34 @@
+"""Guards for the serving-throughput benchmark's trace generator: the
+Poisson arrival trace must be reproducible (the JSON records the seed),
+bucketed (so every prefill shape compiles during warmup, keeping compile
+time out of the throughput numbers), and honest about its knobs."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.serving_throughput import make_trace  # noqa: E402
+
+
+def test_trace_is_reproducible_and_bucketed():
+    kw = dict(n=32, rate=25.0, prompt_buckets=(8, 16, 24),
+              gen_range=(2, 9), vocab=128, seed=5)
+    a, b = make_trace(**kw), make_trace(**kw)
+    assert a == b
+    assert make_trace(**{**kw, "seed": 6}) != a
+
+    arrivals = [d["arrival"] for d in a]
+    assert arrivals == sorted(arrivals) and arrivals[-1] > 0
+    assert {len(d["prompt"]) for d in a} <= {8, 16, 24}
+    assert all(2 <= d["max_new_tokens"] <= 9 for d in a)
+    assert all(1 <= t < 128 for d in a for t in d["prompt"])
+    assert [d["uid"] for d in a] == list(range(32))
+
+
+def test_trace_rate_zero_means_everything_arrives_at_t0():
+    trace = make_trace(n=7, rate=0.0, prompt_buckets=(4,), gen_range=(1, 1),
+                       vocab=16, seed=0)
+    assert all(d["arrival"] == 0.0 for d in trace)
+    assert all(len(d["prompt"]) == 4 and d["max_new_tokens"] == 1
+               for d in trace)
