@@ -98,43 +98,63 @@ def run_mode(engine, trace: list[dict]) -> dict:
 
 def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   max_batch: int, n_requests: int, rate: float,
-                  prompt_buckets, gen_range, out: str,
-                  seed: int = 0) -> dict:
+                  prompt_buckets, gen_range, out: str, seed: int = 0,
+                  strategy: str = "uniform", plan_path: str = "",
+                  save_plan: str = "") -> dict:
     import jax
     import jax.numpy as jnp
 
     from repro import configs
+    from repro.core.sharding import use_mesh
+    from repro.launch.serve import resolve_serve_plan, serve_mesh
     from repro.launch.train import reduced_arch
-    from repro.models import model_module, uniform_plan
+    from repro.models import model_module
     from repro.serve import ServeEngine
 
     arch = reduced_arch(configs.get(arch_name), width, depth, vocab, 4)
-    plan = uniform_plan(arch)
+    max_len = max(prompt_buckets) + gen_range[1]
+    n_dev = jax.device_count()
+    mesh, mesh_spec = serve_mesh(n_dev)
+    plan = resolve_serve_plan(
+        arch, mesh_spec if n_dev > 1 else None, plan_path=plan_path,
+        strategy=strategy, prompt_len=max(prompt_buckets),
+        max_batch=max_batch, max_len=max_len, save_plan=save_plan)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
                        arch.vocab, seed)
-    max_len = max(prompt_buckets) + gen_range[1]
     buckets = sorted({len(d["prompt"]) for d in trace})
 
     report = {
         "kind": "serving", "jax": jax.__version__,
-        "backend": jax.default_backend(), "arch": arch.name,
+        "backend": jax.default_backend(), "devices": n_dev,
+        "arch": arch.name,
         "slots": max_batch, "requests": n_requests, "rate_rps": rate,
         "prompt_buckets": list(map(int, prompt_buckets)),
-        "gen_range": list(map(int, gen_range)), "seed": seed, "modes": {},
+        "gen_range": list(map(int, gen_range)), "seed": seed,
+        # the plan the trace executed under, so the perf trajectory can
+        # attribute throughput moves to strategy moves (plan-vs-uniform
+        # speedup accumulates across CI runs)
+        "plan": {
+            "strategy": plan.strategy_name,
+            "source": plan_path or "built",
+            "phases": {ph: p.describe()
+                       for ph, p in sorted(plan.phases.items())},
+        },
+        "modes": {},
     }
-    for mode in ("continuous", "static"):
-        engine = ServeEngine(params, arch, max_batch=max_batch,
-                             max_len=max_len, plan=plan, q_chunk=256,
-                             policy=mode)
-        engine.warmup(buckets)
-        report["modes"][mode] = run_mode(engine, trace)
-        m = report["modes"][mode]
-        print(f"{mode:>10}: {m['out_tok_per_s']:8.1f} out tok/s  "
-              f"wall {m['wall_s']*1e3:8.1f} ms  "
-              f"{m['decode_steps']} decode steps  "
-              f"p95 latency {m['latency_p95_s']*1e3:.0f} ms")
+    with use_mesh(mesh if n_dev > 1 else None):
+        for mode in ("continuous", "static"):
+            engine = ServeEngine(params, arch, max_batch=max_batch,
+                                 max_len=max_len, plan=plan, q_chunk=256,
+                                 policy=mode)
+            engine.warmup(buckets)
+            report["modes"][mode] = run_mode(engine, trace)
+            m = report["modes"][mode]
+            print(f"{mode:>10}: {m['out_tok_per_s']:8.1f} out tok/s  "
+                  f"wall {m['wall_s']*1e3:8.1f} ms  "
+                  f"{m['decode_steps']} decode steps  "
+                  f"p95 latency {m['latency_p95_s']*1e3:.0f} ms")
     report["continuous_speedup"] = round(
         report["modes"]["continuous"]["out_tok_per_s"]
         / max(report["modes"]["static"]["out_tok_per_s"], 1e-9), 3)
@@ -160,6 +180,15 @@ def main() -> None:
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=48)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--strategy", default="uniform",
+                    choices=["uniform", "data", "model", "owt", "searched"],
+                    help="plan both modes execute under; 'searched' "
+                         "searches prefill + decode phases per the device "
+                         "mesh (the plan lands in the report JSON)")
+    ap.add_argument("--plan", default="",
+                    help="load a ParallelPlan JSON instead of building one")
+    ap.add_argument("--save-plan", default="",
+                    help="persist the plan JSON next to the report")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny model, few requests)")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -169,7 +198,8 @@ def main() -> None:
               n_requests=args.requests, rate=args.rate,
               prompt_buckets=tuple(args.prompt_buckets),
               gen_range=(args.gen_min, args.gen_max), out=args.out,
-              seed=args.seed)
+              seed=args.seed, strategy=args.strategy, plan_path=args.plan,
+              save_plan=args.save_plan)
     if args.smoke:
         kw.update(width=128, depth=2, vocab=256, max_batch=4,
                   n_requests=24, rate=200.0, prompt_buckets=(8, 16, 24),

@@ -117,7 +117,20 @@ def _moe_pallas_factor(node: LayerNode) -> float:
 
 class CostModel:
     def __init__(self, mesh: MeshSpec, training: bool = True,
-                 kernel_backends: dict[str, str] | None = None):
+                 kernel_backends: dict[str, str] | None = None,
+                 phase: str | None = None):
+        """``phase`` ("train" | "prefill" | "decode") is the workload the
+        model prices; it subsumes the older ``training`` flag — prefill
+        and decode reuse the inference machinery (no t_S, no bwd
+        collectives), while the decode-vs-prefill distinction lives in
+        the exported graph (single-token batch over cache slots, with
+        attention flagged cache-read-dominated via ``extra["decode"]``).
+        """
+        if phase is not None:
+            if phase not in ("train", "prefill", "decode"):
+                raise ValueError(f"unknown phase {phase!r}")
+            training = phase == "train"
+        self.phase = phase or ("train" if training else "inference")
         self.mesh = mesh
         self.training = training  # inference => no t_S, no bwd collectives
         # op name -> dispatch backend the strategy will execute with (see

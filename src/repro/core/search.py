@@ -84,14 +84,22 @@ def config_space(graph: CompGraph, mesh: MeshSpec,
 def find_strategy(graph: CompGraph, mesh: MeshSpec,
                   training: bool = True,
                   options: SearchOptions | None = None,
-                  configs: dict[str, list[LayerConfig]] | None = None
-                  ) -> Strategy:
+                  configs: dict[str, list[LayerConfig]] | None = None,
+                  phase: str | None = None) -> Strategy:
     """Optimal strategy under the cost model; when an ``hbm_budget`` is set,
     a Lagrangian-relaxation loop adds a per-byte price to each node's
     persistent memory and re-solves until the plan fits (extension beyond
-    the paper, which assumes parameters always fit)."""
+    the paper, which assumes parameters always fit).
+
+    ``phase`` ("train" | "prefill" | "decode") names the workload being
+    priced and subsumes ``training``: pass the graph exported for that
+    phase's shape and the matching phase here — decode prices a
+    single-token ragged batch over the cache slots with no gradient
+    sync, prefill a batch-1 long sequence (both reuse the
+    ``training=False`` machinery)."""
     options = options or SearchOptions()
-    cm = CostModel(mesh, training=training)
+    cm = CostModel(mesh, training=training, phase=phase)
+    training = cm.training
     cfgs = configs if configs is not None else config_space(graph, mesh, options)
     t0 = time.perf_counter()
 
@@ -156,6 +164,7 @@ def find_strategy(graph: CompGraph, mesh: MeshSpec,
     strategy.meta["search_seconds"] = time.perf_counter() - t0
     strategy.meta["mesh"] = mesh
     strategy.meta["training"] = training
+    strategy.meta["phase"] = cm.phase
     return strategy
 
 

@@ -43,10 +43,10 @@ from repro.models import model_module, strategy_to_plan, uniform_plan
 from repro.models.arch import SHAPES
 from repro.models.graph_export import export_graph
 from repro.optim import adamw_init
-from repro.train import (TrainConfig, batch_pspecs, cache_pspecs,
-                         make_serve_fns, make_train_step, param_pspecs,
-                         to_shardings)
-from repro.train.shardings import dominant_unit_plan
+from repro.plans import (batch_pspecs, cache_pspecs, dominant_unit_plan,
+                         param_pspecs, to_shardings)
+from repro.serve import make_serve_fns
+from repro.train import TrainConfig, make_train_step
 from repro.optim.adamw import zero1_state_pspecs
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
@@ -121,14 +121,12 @@ def input_specs(arch, shape, *, dtype=jnp.bfloat16) -> dict:
 
 def build_strategy(arch, shape, mesh_spec, strategy_name: str):
     graph = export_graph(arch, shape)
-    training = shape.kind == "train"
+    cm = CostModel(mesh_spec, phase=shape.kind)
     if strategy_name == "search":
-        strat = find_strategy(graph, mesh_spec, training=training)
+        strat = find_strategy(graph, mesh_spec, phase=shape.kind)
     else:
         strat = BASELINES[strategy_name](graph, mesh_spec)
-        cm = CostModel(mesh_spec, training=training)
         strat.cost = cm.total_time(graph, strat)
-    cm = CostModel(mesh_spec, training=training)
     comm = cm.comm_bytes(graph, strat)
     return graph, strat, comm
 

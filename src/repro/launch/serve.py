@@ -7,9 +7,16 @@ with per-slot positions, slots retired on EOS / max-tokens.
 ``--no-continuous`` keeps the lockstep static-batch oracle (admit a full
 batch, drain it, admit the next) for A/B comparison.
 
+The strategy flags mirror ``repro.launch.train``: ``--strategy
+{uniform,data,model,owt,searched}`` builds a phase-aware ParallelPlan
+(prefill priced as a batch-1 prompt, decode as a single-token ragged
+batch over the slot pool — the searched configs differ per phase),
+``--plan`` loads one from JSON instead, ``--save-plan`` persists the
+plan next to the run.
+
     PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b \
         --width 256 --depth 4 --batch 4 --requests 8 \
-        --prompt-len 64 --gen 32
+        --prompt-len 64 --gen 32 --strategy searched --save-plan plan.json
 
 Both jitted fns are warmed up on a dummy step before anything is timed
 and compile seconds are reported separately — reported tok/s is steady
@@ -27,14 +34,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import configs
+from repro import compat, configs
+from repro.core.device import AxisSpec, ICI_BW, MeshSpec
+from repro.core.sharding import use_mesh
 from repro.data import make_dataset
-from repro.models import model_module, uniform_plan
+from repro.models import model_module
 from repro.models.arch import ShapeSpec
-from repro.serve import Request, ServeEngine
-from repro.train import make_serve_fns
+from repro.plans import ParallelPlan, STRATEGIES, resolve_plan
+from repro.serve import Request, ServeEngine, make_serve_fns
 
 from .train import reduced_arch
+
+
+def serve_mesh(n_dev: int):
+    """Device mesh + cost-model spec for serving.
+
+    Serving wants a model axis when the host has one to give: the decode
+    phase's searched configs shard heads/d_ff over it while batch rides
+    the data axis.
+    """
+    dims = (n_dev // 2, 2) if (n_dev >= 4 and n_dev % 2 == 0) else (n_dev, 1)
+    mesh = compat.make_mesh(dims, ("data", "model"))
+    spec = MeshSpec(axes=(AxisSpec("data", dims[0], ICI_BW),
+                          AxisSpec("model", dims[1], ICI_BW)))
+    return mesh, spec
+
+
+def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
+                       strategy: str = "uniform", prompt_len: int,
+                       max_batch: int, max_len: int,
+                       save_plan: str = "") -> ParallelPlan:
+    """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
+    serving process executes are prefill + decode (shared by this
+    driver and the serving benchmark)."""
+    return resolve_plan(
+        arch, mesh_spec, phases=("prefill", "decode"),
+        plan_path=plan_path, strategy=strategy, save_plan=save_plan,
+        prompt_len=prompt_len, max_batch=max_batch, max_len=max_len)
 
 
 def _serve_encdec(args, arch, plan) -> None:
@@ -107,6 +143,18 @@ def main() -> None:
     ap.add_argument("--no-continuous", action="store_true",
                     help="static-batch oracle: admit a full batch, drain "
                          "it, admit the next (the pre-engine lockstep)")
+    ap.add_argument("--strategy", default="uniform",
+                    choices=list(STRATEGIES),
+                    help="parallelization plan: uniform/data/model/owt "
+                         "baselines or the searched per-phase plan "
+                         "(prefill + decode searched separately)")
+    ap.add_argument("--plan", default="",
+                    help="load a ParallelPlan JSON (from --save-plan here "
+                         "or on the train driver); overrides --strategy, "
+                         "refuses an arch mismatch")
+    ap.add_argument("--save-plan", default="",
+                    help="write the plan (searched or baseline) to this "
+                         "JSON path for later --plan runs")
     ap.add_argument("--width", type=int, default=256)
     ap.add_argument("--depth", type=int, default=4)
     ap.add_argument("--vocab", type=int, default=512)
@@ -130,14 +178,20 @@ def main() -> None:
 
     arch = reduced_arch(configs.get(args.arch), args.width, args.depth,
                         args.vocab, args.experts)
-    plan = uniform_plan(arch)
+    n_dev = jax.device_count()
+    mesh, mesh_spec = serve_mesh(n_dev)
+    max_len = args.prompt_len + args.gen
+    plan = resolve_serve_plan(
+        arch, mesh_spec if n_dev > 1 else None, plan_path=args.plan,
+        strategy=args.strategy, prompt_len=args.prompt_len,
+        max_batch=args.batch, max_len=max_len, save_plan=args.save_plan)
     if arch.enc_layers:
-        _serve_encdec(args, arch, plan)
+        with use_mesh(mesh if n_dev > 1 else None):
+            _serve_encdec(args, arch, plan)
         return
 
     mod = model_module(arch)
     n_requests = args.requests or 2 * args.batch
-    max_len = args.prompt_len + args.gen
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     shape = ShapeSpec("serve", args.prompt_len, args.batch, "prefill")
     ds = make_dataset(arch, shape)
@@ -149,24 +203,26 @@ def main() -> None:
                 for i in range(n_requests)]
 
     mode = "static" if args.no_continuous else "continuous"
-    engine = ServeEngine(
-        params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
-        q_chunk=256, kernel_backend=args.kernel_backend or None,
-        policy=mode)
-    # warm up on the *actual* request prompt lengths — for frontend (VLM)
-    # archs the dataset emits prompts shorter than --prompt-len, and a
-    # mis-bucketed warmup would push the real prefill compile back into
-    # the timed path
-    t_compile = engine.warmup(sorted({len(r.prompt) for r in requests}))
+    with use_mesh(mesh if n_dev > 1 else None):
+        engine = ServeEngine(
+            params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
+            q_chunk=256, kernel_backend=args.kernel_backend or None,
+            policy=mode)
+        # warm up on the *actual* request prompt lengths — for frontend
+        # (VLM) archs the dataset emits prompts shorter than
+        # --prompt-len, and a mis-bucketed warmup would push the real
+        # prefill compile back into the timed path
+        t_compile = engine.warmup(sorted({len(r.prompt) for r in requests}))
 
-    t0 = time.time()
-    completions = engine.run(requests)
-    wall = time.time() - t0
+        t0 = time.time()
+        completions = engine.run(requests)
+        wall = time.time() - t0
 
     s = engine.stats
     out_tokens = sum(len(c.tokens) for c in completions)
     print(f"arch={arch.name} slots={args.batch} requests={n_requests} "
-          f"prompt={args.prompt_len} gen<={args.gen} mode={mode}")
+          f"prompt={args.prompt_len} gen<={args.gen} mode={mode} "
+          f"plan={plan.strategy_name} devices={n_dev}")
     print(f"compile: {t_compile:.2f} s (excluded from the rates below)")
     print(f"prefill: {s['prefill_s']*1e3:.1f} ms "
           f"({s['prefill_tokens']/max(s['prefill_s'],1e-9):.0f} tok/s)")

@@ -27,17 +27,16 @@ import numpy as np
 
 from repro import compat, configs
 from repro.checkpoint import CheckpointManager
-from repro.core import find_strategy, BASELINES
 from repro.core.device import AxisSpec, ICI_BW, MeshSpec
 from repro.core.sharding import use_mesh
 from repro.data import make_dataset
 from repro.kernels import dispatch as kernel_dispatch
-from repro.models import model_module, strategy_to_plan, uniform_plan
+from repro.models import model_module
 from repro.models.arch import ShapeSpec
-from repro.models.graph_export import export_graph
 from repro.optim import AdamWConfig, adamw_init
-from repro.train import (TrainConfig, batch_pspecs, make_train_step,
-                         param_pspecs, to_shardings)
+from repro.plans import (batch_pspecs, param_pspecs, resolve_plan,
+                         to_shardings)
+from repro.train import TrainConfig, make_train_step
 
 
 def reduced_arch(arch, width, depth, vocab, experts):
@@ -72,7 +71,16 @@ def main() -> None:
     ap.add_argument("--vocab", type=int, default=0)
     ap.add_argument("--experts", type=int, default=0)
     ap.add_argument("--strategy", default="search",
-                    choices=["search", "data", "model", "owt", "none"])
+                    choices=["search", "searched", "data", "model", "owt",
+                             "uniform", "none"])
+    ap.add_argument("--plan", default="",
+                    help="load a ParallelPlan JSON (the train phase is "
+                         "used); overrides --strategy, refuses an arch "
+                         "mismatch")
+    ap.add_argument("--save-plan", default="",
+                    help="write the plan (searched or baseline) to this "
+                         "JSON path; reload with --plan here or on the "
+                         "serve driver")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--resume", action="store_true")
@@ -103,15 +111,13 @@ def main() -> None:
     mesh_spec = MeshSpec(axes=(AxisSpec("data", n_dev, ICI_BW),
                                AxisSpec("model", 1, ICI_BW)))
 
-    if args.strategy == "none" or n_dev == 1:
-        plan = uniform_plan(arch, data_axes=("data",))
-    else:
-        graph = export_graph(arch, shape)
-        strat = (find_strategy(graph, mesh_spec, training=True)
-                 if args.strategy == "search"
-                 else BASELINES[args.strategy](graph, mesh_spec))
-        plan = strategy_to_plan(strat, arch)
-        print(f"strategy cost model: {getattr(strat, 'cost', float('nan')):.6f}s/step")
+    name = {"search": "searched", "none": "uniform"}.get(
+        args.strategy, args.strategy)
+    pplan = resolve_plan(
+        arch, mesh_spec if n_dev > 1 else None, phases=("train",),
+        plan_path=args.plan, strategy=name, save_plan=args.save_plan,
+        train_seq=args.seq, train_batch=args.batch)
+    plan = pplan.plan_for("train")
 
     mod = model_module(arch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,

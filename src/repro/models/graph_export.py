@@ -64,6 +64,25 @@ def export_graph(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     return _export_decoder(arch, shape)
 
 
+def phase_shape(phase: str, *, seq_len: int, batch: int) -> ShapeSpec:
+    """The ShapeSpec a serving/training *phase* prices its graph with.
+
+    ``train``:   the dense global batch (fwd+bwd, gradient sync);
+    ``prefill``: one admitted request — batch 1 at its prompt length;
+    ``decode``:  a single-token ragged batch over ``batch`` cache slots
+                 against a ``seq_len``-deep cache (the exporter emits
+                 Sq=1 and flags attention as cache-read-dominated).
+    """
+    if phase == "train":
+        return ShapeSpec(f"train_{seq_len}", seq_len, batch, "train")
+    if phase == "prefill":
+        return ShapeSpec(f"prefill_{seq_len}", seq_len, 1, "prefill")
+    if phase == "decode":
+        return ShapeSpec(f"decode_{seq_len}", seq_len, batch, "decode")
+    raise ValueError(
+        f"unknown phase {phase!r}; expected train | prefill | decode")
+
+
 # --------------------------------------------------------------------------- #
 def _decoder_chain(b: _Builder, arch: ArchConfig, B: int, Sq: int, Skv: int,
                    prefix: str = "", memory_tokens: int = 0):

@@ -6,6 +6,10 @@ per-pattern-unit dicts of sublayer configs, grouped into **segments** of
 consecutive units with identical plans.  Each segment is ``lax.scan``-ed
 (HLO size O(#segments·period), which is what makes 512-device compiles
 tractable) — the layer-wise strategy is exactly a segmentation.
+
+A ModelPlan is single-phase: it realizes one strategy for one workload
+shape.  The phase-aware, serializable artifact carrying one ModelPlan per
+train/prefill/decode phase is :class:`repro.plans.ParallelPlan`.
 """
 
 from __future__ import annotations
@@ -112,7 +116,6 @@ def uniform_plan(arch: ArchConfig, cfg: LayerConfig | None = None,
     cfg_fn = lambda name, key: cfg
     kw = {}
     if arch.enc_layers:
-        enc_arch = arch
         kw["enc_embed"] = cfg
         kw["enc_segments"] = _segments(
             _enc_view(arch), cfg_fn, arch.enc_layers, prefix="enc.")

@@ -1,0 +1,160 @@
+"""Phase-aware plan search: one searched ParallelPlan for train, prefill
+and decode.
+
+Each phase prices a *different* computation graph of the same model:
+
+* ``train``   — the dense global batch, fwd+bwd FLOPs, gradient sync t_S;
+* ``prefill`` — a batch-1 long sequence (one admitted request), fwd only;
+* ``decode``  — a single-token ragged batch over ``max_batch`` cache
+  slots against a ``max_len`` KV cache, fwd only, no t_S — the dominant
+  tensor is the cache read, so the search trades head/channel sharding
+  against the tiny batch instead of defaulting to data parallelism.
+
+``build_parallel_plan`` searches (or applies a named baseline to) each
+requested phase's graph and packages the results with provenance into a
+:class:`~repro.plans.parallel_plan.ParallelPlan`.
+"""
+
+from __future__ import annotations
+
+from repro.core.device import MeshSpec
+from repro.core.search import SearchOptions, find_strategy
+from repro.core.strategies import BASELINES
+from repro.models.arch import ArchConfig
+from repro.models.graph_export import export_graph, phase_shape
+from repro.models.plan import ModelPlan, strategy_to_plan, uniform_plan
+
+from .parallel_plan import PHASES, ParallelPlan, arch_fingerprint
+
+#: Strategy names the drivers accept (symmetric across train & serve).
+STRATEGIES = ("uniform", "data", "model", "owt", "searched")
+
+
+def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
+                      seq_len: int, batch: int,
+                      options: SearchOptions | None = None,
+                      ) -> tuple[ModelPlan, dict]:
+    """Search one phase; returns (realized plan, provenance dict)."""
+    shape = phase_shape(phase, seq_len=seq_len, batch=batch)
+    graph = export_graph(arch, shape)
+    strat = find_strategy(graph, mesh, phase=phase, options=options)
+    prov = {
+        "phase": phase,
+        "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
+                  "kind": shape.kind},
+        "cost_s": strat.cost,
+        "search_seconds": strat.meta.get("search_seconds"),
+    }
+    return strategy_to_plan(strat, arch), prov
+
+
+def baseline_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str,
+                        strategy: str, *, seq_len: int, batch: int,
+                        ) -> tuple[ModelPlan, dict]:
+    """Apply a named baseline (data/model/owt) to one phase's graph."""
+    shape = phase_shape(phase, seq_len=seq_len, batch=batch)
+    graph = export_graph(arch, shape)
+    strat = BASELINES[strategy](graph, mesh)
+    prov = {"phase": phase,
+            "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
+                      "kind": shape.kind}}
+    return strategy_to_plan(strat, arch), prov
+
+
+def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
+                        strategy: str = "searched",
+                        phases=PHASES,
+                        train_seq: int = 4096, train_batch: int = 256,
+                        prompt_len: int = 512,
+                        max_batch: int = 8, max_len: int | None = None,
+                        options: SearchOptions | None = None) -> ParallelPlan:
+    """Build a ParallelPlan for ``phases`` under one named strategy.
+
+    Phase shapes: train prices ``(train_batch, train_seq)``; prefill a
+    batch-1 ``prompt_len`` sequence; decode a ``max_batch``-slot
+    single-token batch against a ``max_len`` cache (default
+    ``prompt_len`` when unset).  ``mesh=None`` (single device) degrades
+    to the uniform plan regardless of ``strategy``.
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    unknown = [p for p in phases if p not in PHASES]
+    if unknown:
+        raise ValueError(f"unknown phases {unknown}; expected from {PHASES}")
+    if mesh is None or strategy == "uniform":
+        return ParallelPlan.uniform(arch, phases=tuple(phases), mesh=mesh)
+
+    shapes = {
+        "train": (train_seq, train_batch),
+        "prefill": (prompt_len, 1),
+        "decode": (max_len or prompt_len, max_batch),
+    }
+    plans: dict[str, ModelPlan] = {}
+    phase_meta: dict[str, dict] = {}
+    for phase in phases:
+        seq_len, batch = shapes[phase]
+        if strategy == "searched":
+            plans[phase], phase_meta[phase] = search_phase_plan(
+                arch, mesh, phase, seq_len=seq_len, batch=batch,
+                options=options)
+        else:
+            plans[phase], phase_meta[phase] = baseline_phase_plan(
+                arch, mesh, phase, strategy, seq_len=seq_len, batch=batch)
+    import jax
+
+    return ParallelPlan(
+        arch=arch_fingerprint(arch), phases=plans, mesh=mesh,
+        meta={"strategy": strategy, "phases": phase_meta,
+              "jax": jax.__version__})
+
+
+def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
+                 phases=PHASES, plan_path: str = "",
+                 strategy: str = "uniform", save_plan: str = "",
+                 train_seq: int = 4096, train_batch: int = 256,
+                 prompt_len: int = 512, max_batch: int = 8,
+                 max_len: int | None = None,
+                 options: SearchOptions | None = None,
+                 log=print) -> ParallelPlan:
+    """The plan tri-logic every driver shares: ``plan_path`` (load,
+    arch-checked) beats ``strategy`` (build the requested ``phases``);
+    ``save_plan`` persists the result either way.
+
+    Surprises are announced rather than silent: a loaded plan missing a
+    requested phase names the substitute it will execute under, and a
+    non-uniform ``strategy`` on a single device (``mesh=None``) reports
+    the degrade to uniform — the saved file's meta records what was
+    actually built, so downstream ``--plan`` runs see the truth.
+    """
+    if plan_path:
+        plan = ParallelPlan.load(plan_path, arch=arch)
+        log(f"plan: loaded [{plan.strategy_name}] from {plan_path}")
+        for phase in phases:
+            got = plan.resolved_phase(phase)
+            if got != phase:
+                log(f"plan: note — no {phase!r} phase in {plan_path}; "
+                    f"executing {phase} under its {got!r} plan")
+        def axes(m):
+            return [(a.name, a.size) for a in m.axes] if m else None
+        if plan.mesh is not None and axes(plan.mesh) != axes(mesh):
+            log(f"plan: note — plan searched for mesh {axes(plan.mesh)} "
+                f"but this host runs {axes(mesh)}; non-dividing axes "
+                f"drop to replication at realization")
+    else:
+        if mesh is None and strategy != "uniform":
+            log(f"plan: single device — strategy {strategy!r} degrades "
+                f"to uniform (the saved plan records 'uniform')")
+        plan = build_parallel_plan(
+            arch, mesh, strategy=strategy, phases=phases,
+            train_seq=train_seq, train_batch=train_batch,
+            prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
+            options=options)
+        for phase, pm in plan.meta.get("phases", {}).items():
+            cost = pm.get("cost_s")
+            if cost is not None:
+                log(f"plan: {phase} cost model {cost:.6f}s/step")
+    if save_plan:
+        plan.save(save_plan)
+        log(f"plan: wrote {save_plan}")
+    return plan

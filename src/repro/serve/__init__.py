@@ -1,8 +1,11 @@
 """Continuous-batching serving subsystem (slot-pooled KV cache, per-slot
-decode positions, admit/retire mid-decode)."""
+decode positions, admit/retire mid-decode), phase-aware: prefill and
+decode execute under their own phase of a
+:class:`~repro.plans.parallel_plan.ParallelPlan`."""
 
 from .engine import ServeEngine, write_slot
+from .fns import make_serve_fns
 from .scheduler import Completion, Request, SlotScheduler, SlotState
 
 __all__ = ["Completion", "Request", "ServeEngine", "SlotScheduler",
-           "SlotState", "write_slot"]
+           "SlotState", "make_serve_fns", "write_slot"]

@@ -42,11 +42,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.sharding import current_mesh
 from repro.models import model_module
 from repro.models.arch import ArchConfig
 from repro.models.plan import ModelPlan
-from repro.train import make_serve_fns
+from repro.plans import cache_pspecs, to_shardings
+from repro.plans.parallel_plan import ParallelPlan, as_model_plan
 
+from .fns import make_serve_fns
 from .scheduler import Completion, Request, SlotScheduler
 
 
@@ -80,7 +83,7 @@ class ServeEngine:
     """
 
     def __init__(self, params, arch: ArchConfig, *, max_batch: int,
-                 max_len: int, plan: ModelPlan | None = None,
+                 max_len: int, plan: ParallelPlan | ModelPlan | None = None,
                  q_chunk: int = 256, kernel_backend: str | None = None,
                  dtype=jnp.float32, policy: str = "continuous"):
         if arch.enc_layers:
@@ -93,12 +96,26 @@ class ServeEngine:
         self.max_len = int(max_len)
         self.dtype = dtype
         self._mod = model_module(arch)
+        # phase-aware: prefill runs under the plan's prefill phase, the
+        # ragged decode step under its decode phase (a bare ModelPlan
+        # applies to both — the pre-phase API).
+        self.plan = plan
+        self._decode_plan = as_model_plan(plan, arch, "decode")
         self._prefill, self._decode = make_serve_fns(
             arch, plan, q_chunk=q_chunk, kernel_backend=kernel_backend,
             jit=True)
         self._write = jax.jit(write_slot, donate_argnums=(0,))
         self.cache = self._mod.init_cache(arch, self.max_batch, self.max_len,
                                           dtype)
+        mesh = current_mesh()
+        if mesh is not None:
+            # lay the pooled cache out under the decode phase's
+            # PartitionSpecs once, up front; the jitted decode step
+            # (cache donated) keeps the layout for the engine's lifetime.
+            c_sh = to_shardings(
+                cache_pspecs(self.cache, arch, self._decode_plan), mesh,
+                like=self.cache)
+            self.cache = jax.device_put(self.cache, c_sh)
         self.scheduler = SlotScheduler(self.max_batch, policy)
         self.queue: deque[Request] = deque()
         self._tok = np.zeros((self.max_batch,), np.int32)

@@ -1,0 +1,57 @@
+"""Serving step builders (moved out of ``repro.train.step`` — building
+the prefill/decode functions is a serving concern).
+
+``make_serve_fns`` returns jit-able ``(prefill, decode_step)``.  The
+``plan`` argument is phase-aware: pass a
+:class:`~repro.plans.parallel_plan.ParallelPlan` and prefill executes
+under the plan's ``prefill`` phase while decode executes under its
+``decode`` phase — the same layer can (and, per the searched plans,
+does) shard differently in the two phases.  A bare ``ModelPlan`` (the
+pre-phase API) applies to both; ``None`` means uniform.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import dispatch as kernel_dispatch
+from repro.models import model_module
+from repro.models.arch import ArchConfig
+from repro.models.plan import ModelPlan
+from repro.plans.parallel_plan import ParallelPlan, as_model_plan
+
+
+def make_serve_fns(arch: ArchConfig,
+                   plan: ParallelPlan | ModelPlan | None = None,
+                   q_chunk: int = 512, kernel_backend: str | None = None,
+                   *, jit: bool = False):
+    """Build ``(prefill, decode_step)``.
+
+    ``decode_step`` takes ``pos`` as a scalar (static lockstep batch) or a
+    ``(B,)`` vector of per-slot positions (the continuous-batching serve
+    engine's ragged decode).
+
+    With ``jit=True`` both come back jitted with the cache argument
+    donated.  Donating *prefill*'s cache matters as much as decode's: the
+    cache arrives freshly initialized and without donation peak HBM holds
+    two full KV pools (the zeros plus the filled copy) for the whole
+    prefill.
+    """
+    prefill_plan = as_model_plan(plan, arch, "prefill")
+    decode_plan = as_model_plan(plan, arch, "decode")
+    mod = model_module(arch)
+
+    def prefill(params, batch, cache):
+        with kernel_dispatch.force_backend(kernel_backend):
+            return mod.prefill(params, batch, cache, arch, prefill_plan,
+                               q_chunk=q_chunk)
+
+    def decode_step(params, token, cache, pos):
+        with kernel_dispatch.force_backend(kernel_backend):
+            return mod.decode_step(params, token, cache, pos, arch,
+                                   decode_plan)
+
+    if not jit:
+        return prefill, decode_step
+    return (jax.jit(prefill, donate_argnums=(2,)),
+            jax.jit(decode_step, donate_argnums=(2,)))

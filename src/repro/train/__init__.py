@@ -1,4 +1,4 @@
-from .shardings import (
+from .shardings import (  # noqa: F401  (deprecated: moved to repro.plans)
     batch_pspecs,
     cache_pspecs,
     dominant_unit_plan,
@@ -7,6 +7,9 @@ from .shardings import (
 )
 from .step import TrainConfig, make_serve_fns, make_train_step
 
+# ``make_serve_fns`` now lives in repro.serve.fns and the sharding
+# realization in repro.plans.shardings; both stay importable from here
+# so existing code keeps working.
 __all__ = ["TrainConfig", "batch_pspecs", "cache_pspecs",
            "dominant_unit_plan", "make_serve_fns", "make_train_step",
            "param_pspecs", "to_shardings"]

@@ -1,4 +1,4 @@
-"""Train / serve step builders.
+"""Train step builder.
 
 ``make_train_step`` returns a pure function
 ``(params, opt_state, batch) -> (params, opt_state, metrics)`` with:
@@ -8,7 +8,12 @@
   * remat (configurable policy) around each scanned layer segment;
   * AdamW with ZeRO-1-shardable f32 moments.
 
-``make_serve_fns`` returns jit-able ``prefill`` and ``decode_step``.
+``plan`` may be a phase-aware
+:class:`~repro.plans.parallel_plan.ParallelPlan` (the ``train`` phase is
+used), a bare ``ModelPlan``, or ``None`` (uniform).
+
+``make_serve_fns`` moved to :mod:`repro.serve.fns` (it is a serving
+concern); the name is re-exported here for backwards compatibility.
 """
 
 from __future__ import annotations
@@ -21,8 +26,10 @@ import jax.numpy as jnp
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import model_module
 from repro.models.arch import ArchConfig
-from repro.models.plan import ModelPlan, uniform_plan
+from repro.models.plan import ModelPlan
 from repro.optim import AdamWConfig, adamw_update
+from repro.plans.parallel_plan import ParallelPlan, as_model_plan
+from repro.serve.fns import make_serve_fns  # noqa: F401  (deprecated re-export)
 
 
 @dataclass(frozen=True)
@@ -39,10 +46,11 @@ class TrainConfig:
     kernel_backend: str | None = None
 
 
-def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
+def make_train_step(arch: ArchConfig,
+                    plan: ParallelPlan | ModelPlan | None = None,
                     cfg: TrainConfig | None = None):
     cfg = cfg or TrainConfig()
-    plan = plan if plan is not None else uniform_plan(arch)
+    plan = as_model_plan(plan, arch, "train")
     mod = model_module(arch)
 
     def loss(params, batch):
@@ -96,36 +104,3 @@ def make_train_step(arch: ArchConfig, plan: ModelPlan | None = None,
             return _step(params, opt_state, batch)
 
     return train_step
-
-
-def make_serve_fns(arch: ArchConfig, plan: ModelPlan | None = None,
-                   q_chunk: int = 512, kernel_backend: str | None = None,
-                   *, jit: bool = False):
-    """Build ``(prefill, decode_step)``.
-
-    ``decode_step`` takes ``pos`` as a scalar (static lockstep batch) or a
-    ``(B,)`` vector of per-slot positions (the continuous-batching serve
-    engine's ragged decode).
-
-    With ``jit=True`` both come back jitted with the cache argument
-    donated.  Donating *prefill*'s cache matters as much as decode's: the
-    cache arrives freshly initialized and without donation peak HBM holds
-    two full KV pools (the zeros plus the filled copy) for the whole
-    prefill.
-    """
-    plan = plan if plan is not None else uniform_plan(arch)
-    mod = model_module(arch)
-
-    def prefill(params, batch, cache):
-        with kernel_dispatch.force_backend(kernel_backend):
-            return mod.prefill(params, batch, cache, arch, plan,
-                               q_chunk=q_chunk)
-
-    def decode_step(params, token, cache, pos):
-        with kernel_dispatch.force_backend(kernel_backend):
-            return mod.decode_step(params, token, cache, pos, arch, plan)
-
-    if not jit:
-        return prefill, decode_step
-    return (jax.jit(prefill, donate_argnums=(2,)),
-            jax.jit(decode_step, donate_argnums=(2,)))

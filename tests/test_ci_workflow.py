@@ -62,6 +62,23 @@ def test_workflow_bench_job_uploads_artifact():
     assert uploads and "BENCH_" in uploads[0]["with"]["path"]
 
 
+def test_workflow_bench_job_exercises_searched_phase_plan():
+    """The bench-smoke job must search a decode-phase plan on a forced
+    multi-device host, run a serve trace under it, and upload the plan
+    JSON next to BENCH_serving.json (plan files match the BENCH_* glob
+    the artifact step uploads)."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    runs = _all_run_lines(job)
+    assert "--strategy searched" in runs
+    assert "--save-plan BENCH_serving_plan.json" in runs
+    # single-device search is degenerate; the step must force a mesh
+    assert "xla_force_host_platform_device_count" in runs
+    uploads = [s for s in job["steps"]
+               if str(s.get("uses", "")).startswith("actions/upload-artifact")]
+    assert uploads and "BENCH_*.json" in uploads[0]["with"]["path"]
+
+
 def _compat_grep(tree: Path) -> int:
     """The exact gate the lint job runs, pointed at ``tree``/src."""
     script = ('hits="$(grep -rn "CompilerParams\\|AxisType" src/ '

@@ -1,0 +1,173 @@
+"""ParallelPlan artifact: JSON round-trip across every config archetype
+(dense / MoE / RWKV / Mamba-hybrid / enc-dec / VLM), corrupt-file and
+arch-mismatch rejection, phase fallback semantics, and the deprecation
+aliases left behind by the ``train/shardings.py`` + ``make_serve_fns``
+relocation."""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as C
+from repro.core import AxisSpec, ICI_BW, MeshSpec
+from repro.models import lm, uniform_plan
+from repro.plans import (ParallelPlan, PlanArchMismatchError,
+                         PlanFormatError, arch_fingerprint,
+                         build_parallel_plan, cache_pspecs, param_pspecs)
+
+MESH = MeshSpec(axes=(AxisSpec("data", 2, ICI_BW),
+                      AxisSpec("model", 2, ICI_BW)))
+
+
+def _plan(arch, strategy="owt", phases=("train", "prefill", "decode")):
+    return build_parallel_plan(
+        arch, MESH, strategy=strategy, phases=phases,
+        train_seq=256, train_batch=16, prompt_len=64, max_batch=8,
+        max_len=128)
+
+
+@pytest.mark.parametrize("name", C.ALL_ARCHS)
+def test_roundtrip_identical_plans_all_archs(name, tmp_path):
+    """save -> load must reproduce byte-identical phase plans (LayerConfig
+    tuples compare exactly), the mesh, and the arch fingerprint, for every
+    assigned architecture."""
+    arch = C.get(name)
+    plan = _plan(arch)
+    loaded = ParallelPlan.load(plan.save(tmp_path / "plan.json"), arch=arch)
+    assert loaded.phases == plan.phases
+    assert loaded.mesh == plan.mesh
+    assert loaded.arch == plan.arch == arch_fingerprint(arch)
+    assert loaded.meta == plan.meta
+
+
+def test_roundtrip_identical_shardings(tmp_path):
+    """The realized shardings — param, cache and batch PartitionSpecs —
+    must be identical before and after the JSON round trip (searched
+    plan, so non-trivial configs actually flow through the codec)."""
+    arch = C.reduced("llama3_2_1b")
+    plan = _plan(arch, strategy="searched")
+    loaded = ParallelPlan.load(plan.save(tmp_path / "p.json"), arch=arch)
+
+    params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+    cache = lm.init_cache(arch, 4, 32, jnp.float32)
+    for phase in ("train", "prefill", "decode"):
+        a, b = plan.plan_for(phase), loaded.plan_for(phase)
+        assert param_pspecs(params, arch, a) == param_pspecs(params, arch, b)
+        assert cache_pspecs(cache, arch, a) == cache_pspecs(cache, arch, b)
+
+
+def test_corrupt_files_rejected(tmp_path):
+    arch = C.reduced("llama3_2_1b")
+    garbage = tmp_path / "garbage.json"
+    garbage.write_text("{not json at all")
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(garbage, arch=arch)
+
+    missing = tmp_path / "missing.json"
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(missing, arch=arch)
+
+    wrong_schema = tmp_path / "wrong_schema.json"
+    wrong_schema.write_text(json.dumps({"schema": "something.else"}))
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(wrong_schema, arch=arch)
+
+    # a valid plan with a bumped version must be refused, not half-read
+    plan = _plan(arch, phases=("decode",))
+    good = plan.to_json()
+    bad_version = tmp_path / "bad_version.json"
+    bad_version.write_text(json.dumps({**good, "version": 999}))
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(bad_version, arch=arch)
+
+    # structurally broken payload under a valid header
+    broken = dict(good)
+    broken["phases"] = {"decode": {"embed": "nope"}}
+    bad_body = tmp_path / "bad_body.json"
+    bad_body.write_text(json.dumps(broken))
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(bad_body, arch=arch)
+
+    # a phase name this build doesn't know is a *format* error too —
+    # file-level problems must all surface as PlanFormatError
+    bad_phase = dict(good)
+    bad_phase["phases"] = {"embed": good["phases"]["decode"]}
+    bad_phase_f = tmp_path / "bad_phase.json"
+    bad_phase_f.write_text(json.dumps(bad_phase))
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(bad_phase_f, arch=arch)
+
+
+def test_arch_mismatch_rejected(tmp_path):
+    arch = C.reduced("llama3_2_1b")
+    other = C.reduced("olmoe_1b_7b")
+    path = _plan(arch).save(tmp_path / "p.json")
+    with pytest.raises(PlanArchMismatchError):
+        ParallelPlan.load(path, arch=other)
+    # without an arch the load is unchecked (inspection tooling)
+    assert ParallelPlan.load(path).arch["name"] == arch.name
+
+
+def test_plan_for_phase_fallback():
+    arch = C.reduced("llama3_2_1b")
+    decode_only = _plan(arch, phases=("decode",))
+    assert decode_only.plan_for("decode") is decode_only.phases["decode"]
+    # missing phases resolve to the nearest carried phase, never KeyError
+    assert decode_only.plan_for("train") is decode_only.phases["decode"]
+    assert decode_only.plan_for("prefill") is decode_only.phases["decode"]
+    with pytest.raises(KeyError):
+        decode_only.plan_for("serve")  # not a phase
+
+    both = _plan(arch, phases=("train", "decode"))
+    assert both.plan_for("prefill") is both.phases["train"]
+
+
+def test_resolve_plan_announces_surprises(tmp_path):
+    """The shared driver tri-logic must not be silent about phase
+    substitution (a serve-built plan loaded for training) or about the
+    single-device degrade of a non-uniform strategy."""
+    from repro.plans import resolve_plan
+
+    arch = C.reduced("llama3_2_1b")
+    msgs: list[str] = []
+    serve_plan = tmp_path / "serve.json"
+    resolve_plan(arch, MESH, phases=("prefill", "decode"), strategy="owt",
+                 prompt_len=16, max_batch=2, max_len=24,
+                 save_plan=str(serve_plan), log=msgs.append)
+    assert any("wrote" in m for m in msgs)
+
+    msgs.clear()
+    pp = resolve_plan(arch, MESH, phases=("train",),
+                      plan_path=str(serve_plan), log=msgs.append)
+    assert pp.resolved_phase("train") == "prefill"
+    assert any("no 'train' phase" in m and "'prefill'" in m for m in msgs)
+
+    msgs.clear()
+    single = resolve_plan(arch, None, phases=("train",),
+                          strategy="searched", log=msgs.append)
+    assert single.strategy_name == "uniform"   # file meta records truth
+    assert any("degrades" in m for m in msgs)
+
+
+def test_uniform_parallel_plan_matches_model_plan():
+    arch = C.reduced("qwen2_5_3b")
+    pp = ParallelPlan.uniform(arch)
+    assert pp.plan_for("train") == uniform_plan(arch)
+    assert pp.strategy_name == "uniform"
+
+
+def test_deprecated_aliases_still_resolve():
+    """PR contract: existing imports keep working after the relocation of
+    shardings into repro.plans and make_serve_fns into repro.serve."""
+    import repro.plans as plans
+    import repro.serve as serve
+    import repro.train as train
+    import repro.train.shardings as old_shardings
+
+    assert train.make_serve_fns is serve.make_serve_fns
+    for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
+                 "dominant_unit_plan", "to_shardings"):
+        assert getattr(train, name) is getattr(plans, name)
+        assert getattr(old_shardings, name) is getattr(plans, name)

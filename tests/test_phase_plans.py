@@ -1,0 +1,170 @@
+"""Phase-aware search + serving: the decode phase prices a different
+graph than train (single-token ragged batch over cache slots, no
+gradient sync) and therefore picks different configs; a searched
+decode-phase plan loaded from JSON must drive the ServeEngine
+token-for-token equal to the uniform-plan oracle on a real multi-device
+mesh (the acceptance criterion, run in a subprocess so the virtual
+device count is set before jax initializes)."""
+
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro import configs as C
+from repro.core import AxisSpec, CostModel, ICI_BW, MeshSpec, find_strategy
+from repro.models.arch import ShapeSpec
+from repro.models.graph_export import export_graph, phase_shape
+from repro.plans import build_parallel_plan
+
+MESH = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                      AxisSpec("model", 2, ICI_BW)))
+
+
+def test_phase_shape_maps_phases_to_workloads():
+    tr = phase_shape("train", seq_len=256, batch=32)
+    assert (tr.kind, tr.seq_len, tr.global_batch) == ("train", 256, 32)
+    pf = phase_shape("prefill", seq_len=512, batch=99)
+    assert (pf.kind, pf.global_batch) == ("prefill", 1)   # batch-1 prompt
+    de = phase_shape("decode", seq_len=128, batch=8)
+    assert (de.kind, de.seq_len, de.global_batch) == ("decode", 128, 8)
+    with pytest.raises(ValueError):
+        phase_shape("serve", seq_len=1, batch=1)
+
+
+def test_find_strategy_phase_records_meta_and_drops_sync():
+    arch = C.reduced("llama3_2_1b")
+    graph = export_graph(arch, ShapeSpec("d", 64, 8, "decode"))
+    strat = find_strategy(graph, MESH, phase="decode")
+    assert strat.meta["phase"] == "decode"
+    assert strat.meta["training"] is False
+    # decode pricing has no gradient synchronization term at all
+    cm = CostModel(MESH, phase="decode")
+    assert cm.training is False
+    node = graph.nodes["L0.attn"]
+    assert cm.t_s(node, strat["L0.attn"]) == 0.0
+    with pytest.raises(ValueError):
+        CostModel(MESH, phase="serving")
+
+
+def test_decode_search_differs_from_train_search():
+    """The headline claim: the same layer prefers different configs in
+    different phases.  On a 4x2 mesh the train search goes (mostly) data
+    parallel while the decode search — tiny batch, cache-read-dominated
+    attention — shards heads/channels for at least one layer kind."""
+    arch = C.reduced("llama3_2_1b")
+    pp = build_parallel_plan(
+        arch, MESH, strategy="searched", phases=("train", "decode"),
+        train_seq=256, train_batch=32, prompt_len=64, max_batch=8,
+        max_len=256)
+    train_unit = pp.phases["train"].segments[0].plan[0]
+    decode_unit = pp.phases["decode"].segments[0].plan[0]
+    differing = [k for k in train_unit if train_unit[k] != decode_unit[k]]
+    assert differing, (
+        "decode-phase search selected the train-phase config for every "
+        "sublayer — the phase dimension is not doing anything")
+    assert pp.meta["phases"]["decode"]["shape"]["kind"] == "decode"
+
+
+def test_engine_accepts_parallel_plan_single_device():
+    """A uniform ParallelPlan and a bare uniform ModelPlan must generate
+    identically through the engine (the phase plumbing is a no-op when
+    every phase carries the same plan)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import lm, uniform_plan
+    from repro.plans import ParallelPlan
+    from repro.serve import Request, ServeEngine
+
+    arch = C.reduced("llama3_2_1b")
+    params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+    rng = np.random.default_rng(0)
+    prompts = [tuple(int(t) for t in rng.integers(1, arch.vocab, l))
+               for l in (5, 3, 7)]
+    reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
+            for i, p in enumerate(prompts)]
+
+    outs = []
+    for plan in (uniform_plan(arch), ParallelPlan.uniform(arch)):
+        engine = ServeEngine(params, arch, max_batch=2, max_len=16,
+                             plan=plan)
+        engine.warmup([len(p) for p in prompts])
+        outs.append({c.uid: c.tokens for c in engine.run(reqs)})
+    assert outs[0] == outs[1]
+
+
+ACCEPTANCE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import tempfile
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro import compat, configs as C
+    from repro.core import AxisSpec, ICI_BW, MeshSpec
+    from repro.core.sharding import use_mesh
+    from repro.models import lm
+    from repro.plans import ParallelPlan, build_parallel_plan
+    from repro.serve import Request, ServeEngine
+
+    arch = C.reduced("llama3_2_1b")
+    mesh_spec = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                               AxisSpec("model", 2, ICI_BW)))
+    max_len = 24
+    pp = build_parallel_plan(arch, mesh_spec, strategy="searched",
+                             phases=("train", "prefill", "decode"),
+                             train_seq=64, train_batch=32, prompt_len=8,
+                             max_batch=4, max_len=max_len)
+
+    # the decode-phase search must choose differently from train
+    tr = pp.phases["train"].segments[0].plan[0]
+    de = pp.phases["decode"].segments[0].plan[0]
+    diff = [k for k in tr if tr[k] != de[k]]
+    assert diff, "decode phase == train phase everywhere"
+
+    with tempfile.TemporaryDirectory() as d:
+        path = pp.save(d + "/plan.json")
+        loaded = ParallelPlan.load(path, arch=arch)
+    assert loaded.phases == pp.phases
+
+    params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+    rng = np.random.default_rng(3)
+    lens = [5, 8, 3, 8, 5]
+    news = [4, 3, 6, 3, 5]
+    prompts = [tuple(int(t) for t in rng.integers(1, arch.vocab, l))
+               for l in lens]
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=news[i])
+            for i in range(len(lens))]
+
+    # uniform-plan oracle: no mesh, replicated execution
+    oracle = ServeEngine(params, arch, max_batch=4, max_len=max_len)
+    oracle.warmup(sorted(set(lens)))
+    want = {c.uid: c.tokens for c in oracle.run(reqs)}
+
+    # searched plan, loaded from JSON, on the real 8-device mesh
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
+    with use_mesh(mesh):
+        engine = ServeEngine(params, arch, max_batch=4, max_len=max_len,
+                             plan=loaded)
+        engine.warmup(sorted(set(lens)))
+        got = {c.uid: c.tokens for c in engine.run(reqs)}
+    assert got == want, (got, want)
+
+    # the slot pool really is laid out by the decode-phase plan: at
+    # least one cache leaf is distributed over more than one device
+    spans = [len(x.sharding.device_set) for x in jax.tree.leaves(engine.cache)]
+    assert max(spans) > 1, spans
+    print("OK phases-differ=" + ",".join(diff) + " cache-span=" + str(max(spans)))
+""")
+
+
+@pytest.mark.slow
+def test_searched_decode_plan_from_json_drives_engine_on_mesh():
+    r = subprocess.run([sys.executable, "-c", ACCEPTANCE],
+                       capture_output=True, text=True, timeout=1200, cwd=".")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout, r.stdout
