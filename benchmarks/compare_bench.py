@@ -1,0 +1,133 @@
+"""Perf-trajectory regression gate for the CI bench-smoke job.
+
+Compares the current ``BENCH_serving.json`` against the previous run's
+copy (restored from the actions/cache baseline keyed on device kind) and
+fails when a watched metric regresses by more than ``--max-regression``:
+
+* ``continuous_speedup`` — continuous-vs-static throughput ratio; both
+  modes run on the same host in the same job, so the *ratio* is far more
+  robust to runner speed jitter than raw tok/s — but still noisy at
+  smoke scale, so it additionally carries a 1.0 noise floor: a >15%
+  drop only fails while continuous batching is actually below parity
+  (a lucky-fast baseline can then never wedge CI red on jitter alone);
+* ``kv_bytes_reserved`` (paged ``continuous`` mode) — deterministic
+  bytes, catches anyone quietly re-inflating the paged pool;
+* ``kv_reserved_frac`` — the paged/dense reservation ratio, the
+  headline memory win of the paged KV cache.
+
+A missing baseline (first run, new cache key, metric added since) passes
+with a note — the gate tightens as the trajectory accumulates, it never
+blocks the run that starts it.  The reverse is a failure: a metric the
+baseline proves this benchmark used to emit that is *missing from the
+current report* means the code path that produced it is gone (e.g. the
+paged mode silently fell back to dense).
+
+    python -m benchmarks.compare_bench \
+        --baseline bench-baseline/BENCH_serving.json \
+        --current BENCH_serving.json --max-regression 0.15
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+#: (metric name, direction, noise_floor) — "up" regresses when the value
+#: drops, "down" when it grows.  ``noise_floor`` absorbs timing jitter on
+#: shared runners: an "up" metric only fails while the current value is
+#: also below the floor (continuous_speedup swings ~1.1-1.4x run to run
+#: on CI hardware, but below 1.0 continuous batching has genuinely
+#: stopped paying for itself).  The KV byte metrics are deterministic —
+#: no floor, any >tolerance growth is a real change.
+WATCHED = (
+    ("continuous_speedup", "up", 1.0),
+    ("kv_bytes_reserved", "down", None),
+    ("kv_reserved_frac", "down", None),
+)
+
+
+def extract(report: dict) -> dict[str, float]:
+    vals = {}
+    for name, _, _ in WATCHED:
+        v = report.get(name)
+        if v is None:
+            v = report.get("modes", {}).get("continuous", {}).get(name)
+        if isinstance(v, (int, float)) and v > 0:
+            vals[name] = float(v)
+    return vals
+
+
+def compare(baseline: dict, current: dict,
+            max_regression: float) -> list[str]:
+    """Returns the list of failed-metric descriptions (empty = pass)."""
+    base, cur = extract(baseline), extract(current)
+    failures = []
+    for name, direction, floor in WATCHED:
+        if name not in base:
+            print(f"  {name}: no baseline yet — skipped")
+            continue
+        if name not in cur:
+            # the baseline proves this run used to emit the metric; its
+            # disappearance IS the regression (e.g. the paged mode fell
+            # back to dense and stopped reporting kv_reserved_frac)
+            print(f"  {name}: {base[name]:.4g} -> MISSING  REGRESSION")
+            failures.append(
+                f"{name} present in baseline ({base[name]:.4g}) but "
+                f"missing from the current report")
+            continue
+        b, c = base[name], cur[name]
+        ratio = c / b
+        bad = (ratio < 1.0 - max_regression if direction == "up"
+               else ratio > 1.0 + max_regression)
+        if bad and floor is not None and direction == "up" and c >= floor:
+            print(f"  {name}: {b:.4g} -> {c:.4g} ({ratio:.2%}) ok "
+                  f"(above the {floor:g} noise floor)")
+            continue
+        verdict = "REGRESSION" if bad else "ok"
+        print(f"  {name}: {b:.4g} -> {c:.4g} ({ratio:.2%}) {verdict}")
+        if bad:
+            failures.append(
+                f"{name} regressed {b:.4g} -> {c:.4g} "
+                f"(allowed {'-' if direction == 'up' else '+'}"
+                f"{max_regression:.0%})")
+    return failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="previous run's report JSON (from the "
+                         "actions/cache bench baseline)")
+    ap.add_argument("--current", required=True,
+                    help="this run's report JSON")
+    ap.add_argument("--max-regression", type=float, default=0.15,
+                    help="fractional tolerance per watched metric")
+    args = ap.parse_args()
+
+    cur = json.loads(Path(args.current).read_text())
+    base_path = Path(args.baseline)
+    if not base_path.exists():
+        print(f"no baseline at {base_path} (first run on this cache "
+              f"key) — gate passes, current report becomes the baseline")
+        return 0
+    try:
+        base = json.loads(base_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"unreadable baseline {base_path} ({e}) — gate passes, "
+              f"baseline will be replaced")
+        return 0
+    print(f"comparing {args.current} against baseline "
+          f"(max regression {args.max_regression:.0%}):")
+    failures = compare(base, cur, args.max_regression)
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,17 +1,23 @@
 """Serving throughput benchmark: continuous batching vs the static-batch
-oracle on a Poisson arrival trace with mixed prompt/output lengths.
+oracle — and the paged KV cache vs dense slot rows — on a Poisson
+arrival trace with mixed prompt/output lengths.
 
     PYTHONPATH=src python -m benchmarks.serving_throughput --smoke \
         --out BENCH_serving.json
 
-Both modes run the *same* trace through the same engine machinery
+All modes run the *same* trace through the same engine machinery
 (identical prefill/decode compiled fns — only the slot admission policy
-differs), with all shapes warmed up before the clock starts, so the
-delta is pure scheduling: static mode drains a whole batch before
-admitting the next (short requests pad out to the longest), continuous
-mode refills a slot the moment it frees.  Emits ``BENCH_serving.json``
-(one point of the serving perf trajectory; the `continuous_speedup`
-ratio drifting below 1.0 is the regression signal).
+and cache layout differ), with all shapes warmed up before the clock
+starts.  ``continuous`` and ``static`` run the paged cache
+(``--kv-block-size``, pool auto-sized to the trace's worst-case request
+unless ``--kv-pool-blocks`` overrides); a third ``dense`` mode
+(continuous policy, per-slot ``max_len`` rows) is the memory baseline.
+Emits ``BENCH_serving.json`` — one point of the serving perf
+trajectory: ``continuous_speedup`` < 1.0 and ``kv_bytes_reserved``
+(paged mode) growing are the regression signals the CI bench gate
+compares run over run; ``kv_reserved_frac`` is the paged/dense memory
+ratio and ``paged_speedup`` the paged/dense throughput ratio (the paged
+cache must win memory without losing tok/s).
 """
 
 from __future__ import annotations
@@ -93,6 +99,11 @@ def run_mode(engine, trace: list[dict]) -> dict:
         "compile_s": round(s["compile_s"], 3),
         "latency_mean_s": round(float(lats.mean()), 4),
         "latency_p95_s": round(float(np.quantile(lats, 0.95)), 4),
+        # memory truth: bytes physically reserved for KV and the paged
+        # pool's allocation high-water mark (0 when dense / no KV)
+        "kv_bytes_reserved": int(engine.kv_bytes_reserved),
+        "kv_block_size": int(engine.block_size),
+        "peak_blocks_in_use": int(engine.peak_blocks_in_use),
     }
 
 
@@ -100,7 +111,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   max_batch: int, n_requests: int, rate: float,
                   prompt_buckets, gen_range, out: str, seed: int = 0,
                   strategy: str = "uniform", plan_path: str = "",
-                  save_plan: str = "") -> dict:
+                  save_plan: str = "", kv_block_size: int = 128,
+                  kv_pool_blocks: int = 0, max_len: int = 0) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -109,21 +121,30 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
     from repro.launch.serve import resolve_serve_plan, serve_mesh
     from repro.launch.train import reduced_arch
     from repro.models import model_module
-    from repro.serve import ServeEngine
+    from repro.serve import ServeEngine, blocks_for_request
 
     arch = reduced_arch(configs.get(arch_name), width, depth, vocab, 4)
-    max_len = max(prompt_buckets) + gen_range[1]
+    max_len = max_len or (max(prompt_buckets) + gen_range[1])
+    typical = min(max(prompt_buckets) + gen_range[1], max_len)
     n_dev = jax.device_count()
     mesh, mesh_spec = serve_mesh(n_dev)
     plan = resolve_serve_plan(
         arch, mesh_spec if n_dev > 1 else None, plan_path=plan_path,
         strategy=strategy, prompt_len=max(prompt_buckets),
-        max_batch=max_batch, max_len=max_len, save_plan=save_plan)
+        max_batch=max_batch, max_len=max_len,
+        kv_block_size=kv_block_size, typical_tokens=typical,
+        save_plan=save_plan)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
                        arch.vocab, seed)
     buckets = sorted({len(d["prompt"]) for d in trace})
+    if kv_block_size and not kv_pool_blocks:
+        # auto pool: every slot simultaneously holding the trace's
+        # worst-case request — the honest reservation, vs the dense
+        # layout's max_batch * max_len
+        kv_pool_blocks = max_batch * blocks_for_request(
+            max(prompt_buckets), gen_range[1], max_len, kv_block_size)
 
     report = {
         "kind": "serving", "jax": jax.__version__,
@@ -132,6 +153,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         "slots": max_batch, "requests": n_requests, "rate_rps": rate,
         "prompt_buckets": list(map(int, prompt_buckets)),
         "gen_range": list(map(int, gen_range)), "seed": seed,
+        "max_len": int(max_len), "kv_block_size": int(kv_block_size),
+        "kv_pool_blocks": int(kv_pool_blocks),
         # the plan the trace executed under, so the perf trajectory can
         # attribute throughput moves to strategy moves (plan-vs-uniform
         # speedup accumulates across CI runs)
@@ -143,22 +166,41 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         },
         "modes": {},
     }
+    # (mode name, admission policy, block size, pool blocks): the paged
+    # continuous/static pair measures scheduling, the dense continuous
+    # baseline measures the paging memory/throughput delta
+    runs = [("continuous", "continuous", kv_block_size, kv_pool_blocks),
+            ("static", "static", kv_block_size, kv_pool_blocks)]
+    if kv_block_size:
+        runs.append(("dense", "continuous", 0, 0))
     with use_mesh(mesh if n_dev > 1 else None):
-        for mode in ("continuous", "static"):
+        for mode, policy, bs, pool in runs:
             engine = ServeEngine(params, arch, max_batch=max_batch,
                                  max_len=max_len, plan=plan, q_chunk=256,
-                                 policy=mode)
+                                 policy=policy, kv_block_size=bs,
+                                 kv_pool_blocks=pool or None)
             engine.warmup(buckets)
             report["modes"][mode] = run_mode(engine, trace)
             m = report["modes"][mode]
             print(f"{mode:>10}: {m['out_tok_per_s']:8.1f} out tok/s  "
                   f"wall {m['wall_s']*1e3:8.1f} ms  "
                   f"{m['decode_steps']} decode steps  "
-                  f"p95 latency {m['latency_p95_s']*1e3:.0f} ms")
+                  f"p95 latency {m['latency_p95_s']*1e3:.0f} ms  "
+                  f"kv {m['kv_bytes_reserved']/2**20:.2f} MiB")
+    modes = report["modes"]
     report["continuous_speedup"] = round(
-        report["modes"]["continuous"]["out_tok_per_s"]
-        / max(report["modes"]["static"]["out_tok_per_s"], 1e-9), 3)
+        modes["continuous"]["out_tok_per_s"]
+        / max(modes["static"]["out_tok_per_s"], 1e-9), 3)
     print(f"continuous/static throughput: {report['continuous_speedup']}x")
+    if "dense" in modes:
+        report["paged_speedup"] = round(
+            modes["continuous"]["out_tok_per_s"]
+            / max(modes["dense"]["out_tok_per_s"], 1e-9), 3)
+        report["kv_reserved_frac"] = round(
+            modes["continuous"]["kv_bytes_reserved"]
+            / max(modes["dense"]["kv_bytes_reserved"], 1), 3)
+        print(f"paged/dense throughput: {report['paged_speedup']}x  "
+              f"kv reserved: {report['kv_reserved_frac']:.1%} of dense")
     Path(out).write_text(json.dumps(report, indent=1))
     print(f"wrote {out}")
     return report
@@ -179,6 +221,17 @@ def main() -> None:
                     default=[16, 32, 64])
     ap.add_argument("--gen-min", type=int, default=4)
     ap.add_argument("--gen-max", type=int, default=48)
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="per-slot cache row budget (0 = max prompt "
+                         "bucket + gen-max); the dense baseline reserves "
+                         "this per slot, paging only what is used")
+    ap.add_argument("--kv-block-size", type=int, default=128,
+                    help="tokens per paged-KV block (0 = dense rows "
+                         "everywhere, skipping the paged-vs-dense "
+                         "comparison)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="usable paged-pool blocks (0 = auto: every slot "
+                         "holding the trace's worst-case request)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--strategy", default="uniform",
                     choices=["uniform", "data", "model", "owt", "searched"],
@@ -199,11 +252,16 @@ def main() -> None:
               prompt_buckets=tuple(args.prompt_buckets),
               gen_range=(args.gen_min, args.gen_max), out=args.out,
               seed=args.seed, strategy=args.strategy, plan_path=args.plan,
-              save_plan=args.save_plan)
+              save_plan=args.save_plan, kv_block_size=args.kv_block_size,
+              kv_pool_blocks=args.kv_pool_blocks, max_len=args.max_len)
     if args.smoke:
+        # CI-sized model, but the trace shape of the paged-KV acceptance
+        # run: ragged 16-512 token prompts against a 2048-token row
+        # budget, so kv_reserved_frac measures the real paging win
         kw.update(width=128, depth=2, vocab=256, max_batch=4,
-                  n_requests=24, rate=200.0, prompt_buckets=(8, 16, 24),
-                  gen_range=(2, 40), seed=1)
+                  n_requests=24, rate=200.0,
+                  prompt_buckets=(16, 64, 256, 512),
+                  gen_range=(2, 40), seed=1, max_len=2048)
     run_benchmark(**kw)
 
 

@@ -26,6 +26,10 @@ Ops registered by the sibling modules (canonical layouts/signatures):
   decode_attention(q, k, v, kv_len, *, block_k)
       q: (B, KH, G, D); k/v: (B, KH, T, D) -> (B, KH, G, D)
       kv_len: scalar or (B,) per-slot valid lengths (continuous batching)
+  paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len)
+      q: (B, KH, G, D); k_pool/v_pool: (NB, block_size, KH, D);
+      block_tables: (B, pages) int32 page->physical-block map
+      -> (B, KH, G, D)  (the serve engine's paged KV cache)
   wkv6(r, k, v, w, u, *, chunk, initial_state, return_state)
       r/k/v/w: (B, H, T, N); u: (H, N) -> (B, H, T, N) [, (B, H, N, N)]
   mamba_scan(dt, B, C, x, A, D, *, chunk, initial_state, return_state)
@@ -135,6 +139,7 @@ def _ensure_builtins() -> None:
     if compat.HAS_PALLAS:
         from . import decode_attention  # noqa: F401
         from . import flash_attention  # noqa: F401
+        from . import paged_decode_attention  # noqa: F401
         from . import rwkv6_scan  # noqa: F401
 
 

@@ -70,6 +70,25 @@ def decode_attention(q, k, v, kv_len, *, block_k: int | None = None,
     return _decode(q, k, v, kv_len, block_k=block_k, backend=impl.backend)
 
 
+@partial(jax.jit, static_argnames=("backend",))
+def _paged_decode(q, k_pool, v_pool, block_tables, kv_len, *, backend):
+    return dispatch.call("paged_decode_attention", q, k_pool, v_pool,
+                         block_tables, kv_len, backend=backend)
+
+
+def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                           interpret: bool | None = None,
+                           backend: str | None = None):
+    """q: (B, KH, G, D); k_pool/v_pool: (NB, block_size, KH, D);
+    block_tables: (B, pages) int32 -> (B, KH, G, D).
+    kv_len: scalar or (B,) per-slot valid lengths."""
+    impl = dispatch.select("paged_decode_attention", q, k_pool, v_pool,
+                           block_tables, kv_len,
+                           backend=_resolve(backend, interpret))
+    return _paged_decode(q, k_pool, v_pool, block_tables, kv_len,
+                         backend=impl.backend)
+
+
 @partial(jax.jit, static_argnames=("chunk", "return_state", "backend"))
 def _mamba(dt, Bm, Cm, x, A, D, initial_state, *, chunk, return_state,
            backend):

@@ -1,0 +1,152 @@
+"""Paged flash-decode attention kernel for TPU (Pallas).
+
+Single-token decode against a *paged* KV cache: instead of one dense
+``(B, max_len, KH, D)`` row per slot, K/V live in a global pool of
+fixed-size blocks ``(num_blocks, block_size, KH, D)`` and each slot owns
+a **block table** — a ``(B, pages)`` int32 map from logical page index
+to physical pool block (vLLM's PagedAttention, arXiv:2309.06180,
+adapted to the TPU flash-decode layout of ``decode_attention``).
+
+The block table and per-slot valid lengths ride in as *scalar-prefetch*
+operands (``pltpu.PrefetchScalarGridSpec``): the k/v BlockSpec index
+maps dereference ``table[b, page]`` before the kernel body runs, so each
+grid step DMAs exactly one physical block — the kernel never sees (and
+HBM never stores) the dense ``max_len`` view.  Pages at or beyond a
+slot's ``kv_len`` are skipped for compute and their table entries point
+at physical block 0 (the engine's trash block), keeping the prefetched
+DMA harmless.  As in ``decode_attention``, the GQA group dimension G is
+the sublane axis of the q tile so the MXU stays busy at q_len == 1, with
+f32 (m, l, acc) running statistics in VMEM scratch.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from . import dispatch
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
+                  l_ref, acc_ref, *, block_size: int, pages: int,
+                  scale: float, kv_heads: int):
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0) // kv_heads]
+    start = pi * block_size
+
+    @pl.when(start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)       # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bs)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
+                           v_pool: jax.Array, block_tables: jax.Array,
+                           kv_len, *, interpret: bool = False) -> jax.Array:
+    """q: (B, KH, G, D); k_pool/v_pool: (NB, bs, KH, D); block_tables:
+    (B, pages) int32; kv_len: scalar int32 or a (B,) vector of per-slot
+    valid lengths.  Returns (B, KH, G, D)."""
+    from .ref import normalize_kv_len
+
+    B, KH, G, D = q.shape
+    _, bs, _, _ = k_pool.shape
+    pages = block_tables.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    kv_len = normalize_kv_len(kv_len, B)
+    block_tables = block_tables.astype(jnp.int32)
+
+    kernel = functools.partial(_paged_kernel, block_size=bs, pages=pages,
+                               scale=scale, kv_heads=KH)
+    # Scalar prefetch: the block table (and lengths) are available to the
+    # index maps, so the pool blockspec fetches table[b, page] directly.
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * KH, pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D),
+                         lambda bk, pi, bt, ln: (bk // KH, bk % KH, 0, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda bk, pi, bt, ln:
+                         (bt[bk // KH, pi], 0, bk % KH, 0)),
+            pl.BlockSpec((1, bs, 1, D),
+                         lambda bk, pi, bt, ln:
+                         (bt[bk // KH, pi], 0, bk % KH, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D),
+                               lambda bk, pi, bt, ln:
+                               (bk // KH, bk % KH, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),   # m
+            pltpu.VMEM((G, 1), jnp.float32),   # l
+            pltpu.VMEM((G, D), jnp.float32),   # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
+        interpret=interpret,
+    )(block_tables, kv_len, q, k_pool, v_pool)
+
+
+# --------------------------------------------------------------------------- #
+# dispatch registration: "pallas" (native TPU) and "interpret" backends
+# --------------------------------------------------------------------------- #
+def _supports(q, k_pool, v_pool, block_tables, kv_len):
+    return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
+            and block_tables.ndim == 2
+            and block_tables.shape[0] == q.shape[0])
+
+
+def _supports_native(q, k_pool, v_pool, block_tables, kv_len):
+    # Mosaic wants the (G, block_size) score tile lane axis 128-aligned;
+    # pools with a smaller block size fall back to the gather backend.
+    return _supports(q, k_pool, v_pool, block_tables, kv_len) \
+        and k_pool.shape[1] % 128 == 0
+
+
+def _via_pallas(q, k_pool, v_pool, block_tables, kv_len, *,
+                interpret=False):
+    return paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len,
+                                  interpret=interpret)
+
+
+dispatch.register("paged_decode_attention", "pallas", platforms=("tpu",),
+                  priority=100, supports=_supports_native, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=False))
+dispatch.register("paged_decode_attention", "interpret",
+                  priority=20, supports=_supports, spmd_safe=False)(
+    functools.partial(_via_pallas, interpret=True))

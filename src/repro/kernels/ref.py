@@ -69,6 +69,33 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
+                               v_pool: jax.Array, block_tables: jax.Array,
+                               kv_len) -> jax.Array:
+    """Gather oracle for the paged flash-decode kernel.
+
+    q: (B, KH, G, D); k_pool/v_pool: (NB, block_size, KH, D);
+    block_tables: (B, pages) int32 — logical page p of slot b lives in
+    physical block ``block_tables[b, p]``; kv_len: scalar or (B,) — row b
+    attends to logical positions < kv_len[b].
+
+    Gathers each slot's pages into its dense (pages*block_size) view and
+    reuses :func:`decode_attention_ref`; unallocated table entries point
+    at the engine's trash block and are masked by ``kv_len`` exactly like
+    stale positions in the dense cache.
+    """
+    B, KH, G, D = q.shape
+    bs = k_pool.shape[1]
+    pages = block_tables.shape[1]
+    bt = block_tables.astype(jnp.int32)
+    # (B, pages, bs, KH, D) -> (B, KH, pages*bs, D)
+    gather = lambda pool: pool[bt].transpose(0, 3, 1, 2, 4).reshape(
+        B, KH, pages * bs, D)
+    out = decode_attention_ref(q.reshape(B, KH * G, D), gather(k_pool),
+                               gather(v_pool), kv_len)
+    return out.reshape(B, KH, G, D)
+
+
 def wkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
              u: jax.Array, state: jax.Array | None = None):
     """RWKV6 recurrence oracle.
@@ -171,9 +198,19 @@ def _wkv6_ref(r, k, v, w, u, *, chunk=64, initial_state=None,
 # lowering (linear-memory softmax / chunk-checkpointed scan), so the same
 # fn registers under both names — keeping the "xla" override usable on
 # every op (flash_attention's distinct chunked impl lives in mha_xla.py).
+def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
+    return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
+            and block_tables.ndim == 2
+            and block_tables.shape[0] == q.shape[0])
+
+
 dispatch.register("decode_attention", "ref", priority=60,
                   supports=_decode_supports)(_decode_ref)
 dispatch.register("decode_attention", "xla", priority=50,
                   supports=_decode_supports)(_decode_ref)
+dispatch.register("paged_decode_attention", "ref", priority=60,
+                  supports=_paged_supports)(paged_decode_attention_ref)
+dispatch.register("paged_decode_attention", "xla", priority=50,
+                  supports=_paged_supports)(paged_decode_attention_ref)
 dispatch.register("wkv6", "ref", priority=60)(_wkv6_ref)
 dispatch.register("wkv6", "xla", priority=50)(_wkv6_ref)

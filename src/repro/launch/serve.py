@@ -3,9 +3,12 @@
 Decoder-only LMs run through the continuous-batching engine
 (``repro.serve.ServeEngine``): a fixed pool of ``--batch`` cache slots,
 requests admitted into free slots mid-decode, ragged single-token decode
-with per-slot positions, slots retired on EOS / max-tokens.
-``--no-continuous`` keeps the lockstep static-batch oracle (admit a full
-batch, drain it, admit the next) for A/B comparison.
+with per-slot positions, slots retired on EOS / max-tokens.  KV is paged
+(``--kv-block-size`` tokens per block, block-table indirection, lazy
+allocation; ``--kv-pool-blocks`` bounds the pool) — ``--kv-block-size
+0`` keeps the dense per-slot ``max_len`` rows.  ``--no-continuous``
+keeps the lockstep static-batch oracle (admit a full batch, drain it,
+admit the next) for A/B comparison.
 
 The strategy flags mirror ``repro.launch.train``: ``--strategy
 {uniform,data,model,owt,searched}`` builds a phase-aware ParallelPlan
@@ -63,14 +66,29 @@ def serve_mesh(n_dev: int):
 def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
                        strategy: str = "uniform", prompt_len: int,
                        max_batch: int, max_len: int,
+                       kv_block_size: int = 0,
+                       typical_tokens: int | None = None,
                        save_plan: str = "") -> ParallelPlan:
     """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
     serving process executes are prefill + decode (shared by this
-    driver and the serving benchmark)."""
+    driver and the serving benchmark).
+
+    With a paged cache (``kv_block_size > 0``) the decode phase is
+    priced at the per-slot *allocated-blocks* depth — ``typical_tokens``
+    (a request's realistic prompt+output budget, default
+    ``prompt_len``-based ``max_len``) rounded up to whole blocks —
+    instead of the dense ``max_len`` reservation, so the searched decode
+    plan sees the cache traffic the engine actually moves.
+    """
+    kv_tokens = None
+    if kv_block_size:
+        tokens = min(typical_tokens or max_len, max_len)
+        kv_tokens = -(-tokens // kv_block_size) * kv_block_size
     return resolve_plan(
         arch, mesh_spec, phases=("prefill", "decode"),
         plan_path=plan_path, strategy=strategy, save_plan=save_plan,
-        prompt_len=prompt_len, max_batch=max_batch, max_len=max_len)
+        prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
+        decode_kv_tokens=kv_tokens)
 
 
 def _serve_encdec(args, arch, plan) -> None:
@@ -143,6 +161,14 @@ def main() -> None:
     ap.add_argument("--no-continuous", action="store_true",
                     help="static-batch oracle: admit a full batch, drain "
                          "it, admit the next (the pre-engine lockstep)")
+    ap.add_argument("--kv-block-size", type=int, default=128,
+                    help="tokens per paged-KV block (0 = dense per-slot "
+                         "max_len rows, the pre-paging layout)")
+    ap.add_argument("--kv-pool-blocks", type=int, default=0,
+                    help="usable blocks in the paged KV pool (0 = "
+                         "dense-equivalent capacity); smaller pools "
+                         "serve the same slots in less memory, gated by "
+                         "block-budget admission")
     ap.add_argument("--strategy", default="uniform",
                     choices=list(STRATEGIES),
                     help="parallelization plan: uniform/data/model/owt "
@@ -184,7 +210,8 @@ def main() -> None:
     plan = resolve_serve_plan(
         arch, mesh_spec if n_dev > 1 else None, plan_path=args.plan,
         strategy=args.strategy, prompt_len=args.prompt_len,
-        max_batch=args.batch, max_len=max_len, save_plan=args.save_plan)
+        max_batch=args.batch, max_len=max_len,
+        kv_block_size=args.kv_block_size, save_plan=args.save_plan)
     if arch.enc_layers:
         with use_mesh(mesh if n_dev > 1 else None):
             _serve_encdec(args, arch, plan)
@@ -207,7 +234,8 @@ def main() -> None:
         engine = ServeEngine(
             params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
             q_chunk=256, kernel_backend=args.kernel_backend or None,
-            policy=mode)
+            policy=mode, kv_block_size=args.kv_block_size,
+            kv_pool_blocks=args.kv_pool_blocks or None)
         # warm up on the *actual* request prompt lengths — for frontend
         # (VLM) archs the dataset emits prompts shorter than
         # --prompt-len, and a mis-bucketed warmup would push the real
@@ -220,9 +248,13 @@ def main() -> None:
 
     s = engine.stats
     out_tokens = sum(len(c.tokens) for c in completions)
+    kv_desc = (f"paged(bs={engine.block_size}, "
+               f"peak_blocks={engine.peak_blocks_in_use})"
+               if engine.paged else "dense")
     print(f"arch={arch.name} slots={args.batch} requests={n_requests} "
           f"prompt={args.prompt_len} gen<={args.gen} mode={mode} "
-          f"plan={plan.strategy_name} devices={n_dev}")
+          f"plan={plan.strategy_name} devices={n_dev} kv={kv_desc}")
+    print(f"kv reserved: {engine.kv_bytes_reserved/2**20:.2f} MiB")
     print(f"compile: {t_compile:.2f} s (excluded from the rates below)")
     print(f"prefill: {s['prefill_s']*1e3:.1f} ms "
           f"({s['prefill_tokens']/max(s['prefill_s'],1e-9):.0f} tok/s)")

@@ -64,7 +64,8 @@ def export_graph(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     return _export_decoder(arch, shape)
 
 
-def phase_shape(phase: str, *, seq_len: int, batch: int) -> ShapeSpec:
+def phase_shape(phase: str, *, seq_len: int, batch: int,
+                kv_tokens: int | None = None) -> ShapeSpec:
     """The ShapeSpec a serving/training *phase* prices its graph with.
 
     ``train``:   the dense global batch (fwd+bwd, gradient sync);
@@ -72,13 +73,20 @@ def phase_shape(phase: str, *, seq_len: int, batch: int) -> ShapeSpec:
     ``decode``:  a single-token ragged batch over ``batch`` cache slots
                  against a ``seq_len``-deep cache (the exporter emits
                  Sq=1 and flags attention as cache-read-dominated).
+
+    ``kv_tokens`` (decode only) prices the cache read at the *allocated*
+    per-slot depth instead of the ``max_len`` reservation — under the
+    paged KV cache a slot's live blocks cover its actual request, so the
+    dominant ``kv_bytes`` term (and the searched decode plan with it)
+    must not be inflated to the padded worst case.
     """
     if phase == "train":
         return ShapeSpec(f"train_{seq_len}", seq_len, batch, "train")
     if phase == "prefill":
         return ShapeSpec(f"prefill_{seq_len}", seq_len, 1, "prefill")
     if phase == "decode":
-        return ShapeSpec(f"decode_{seq_len}", seq_len, batch, "decode")
+        depth = min(seq_len, kv_tokens) if kv_tokens else seq_len
+        return ShapeSpec(f"decode_{depth}", depth, batch, "decode")
     raise ValueError(
         f"unknown phase {phase!r}; expected train | prefill | decode")
 

@@ -106,6 +106,7 @@ def init_attention(key, arch, dtype):
 def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
               *, positions: jax.Array, causal: bool = True,
               kv_cache: dict | None = None, cache_pos=None,
+              block_tables: jax.Array | None = None,
               kv_override: tuple | None = None, q_chunk: int = 1024,
               use_rope: bool = True):
     """GQA attention block (qkv proj + core).  ``cfg`` shards the
@@ -117,6 +118,10 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     (B,) vector of per-slot positions (continuous batching: each cache
     slot carries its own request), in which case ``positions`` is (B, 1)
     and the write is a per-row scatter at ``cache_pos[b]``.
+    block_tables: (B, pages) int32 — the cache is *paged*: kv_cache
+    leaves are a global block pool (num_blocks, block_size, KH, D) and
+    row b's logical page p lives in physical block ``block_tables[b, p]``
+    (single-token decode only; requires per-slot ``cache_pos``).
     kv_override: (k, v, kv_positions) for cross-attention.
     Returns (attn_out_(B,S,H,D), new_cache).
     """
@@ -142,6 +147,38 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         q = rms_norm(q, p["q_norm"])
     if use_rope:
         q = rope(q, positions, arch.rope_theta)
+
+    if kv_cache is not None and block_tables is not None:
+        # Paged decode: scatter the new token's K/V into its physical
+        # block, then run the block-table-aware split-KV kernel.  The
+        # pool is shared across slots, so the write indexes the token
+        # axis of the flattened pool — free slots park their (ignored)
+        # writes in physical block 0, the engine's trash block.
+        if S != 1:
+            raise ValueError(
+                f"paged attention requires single-token decode (got S={S})")
+        if getattr(cache_pos, "ndim", 0) != 1:
+            raise ValueError(
+                "paged attention requires per-slot (B,) cache_pos; got "
+                f"{getattr(cache_pos, 'shape', cache_pos)}")
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        NB, bs = ck.shape[0], ck.shape[1]
+        phys = (block_tables[jnp.arange(B), cache_pos // bs] * bs
+                + cache_pos % bs)                             # (B,)
+        ck = ck.reshape(NB * bs, KH, hd).at[phys].set(
+            k[:, 0].astype(ck.dtype)).reshape(ck.shape)
+        cv = cv.reshape(NB * bs, KH, hd).at[phys].set(
+            v[:, 0].astype(cv.dtype)).reshape(cv.shape)
+        q = constrain(q, cfg, ("batch", "seq", "heads", None))
+        ck = constrain(ck, cfg, (None, None, "heads", None))
+        cv = constrain(cv, cfg, (None, None, "heads", None))
+        H = q.shape[2]
+        qg = q.reshape(B, KH, H // KH, hd)
+        o = kernel_dispatch.call("paged_decode_attention", qg, ck, cv,
+                                 block_tables, positions[..., -1] + 1)
+        o = o.reshape(B, 1, H, hd)
+        o = constrain(o, cfg, ("batch", "seq", "heads", None))
+        return o, {"k": ck, "v": cv}
 
     new_cache = None
     if kv_cache is not None:

@@ -13,8 +13,10 @@ Entry points:
   forward(params, batch, arch, plan)             -> (logits, aux)
   loss_fn(params, batch, arch, plan)             -> (loss, metrics)
   init_cache(arch, batch, max_len, dtype)        -> cache
+  init_paged_cache(arch, num_blocks, block_size, batch, dtype) -> cache
   prefill(params, batch, cache, arch, plan)      -> (logits_last, cache)
-  decode_step(params, token, cache, pos, arch, plan) -> (logits, cache)
+  decode_step(params, token, cache, pos, arch, plan[, block_tables])
+                                                 -> (logits, cache)
 """
 
 from __future__ import annotations
@@ -91,8 +93,8 @@ def init_lm(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
 # --------------------------------------------------------------------------- #
 def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
                  *, positions, causal=True, cache=None, cache_pos=None,
-                 memory=None, memory_positions=None, q_chunk=512,
-                 time_chunk=64):
+                 block_tables=None, memory=None, memory_positions=None,
+                 q_chunk=512, time_chunk=64):
     """Returns (h, aux_loss, new_cache)."""
     aux = 0.0
     new_cache: dict = {}
@@ -108,7 +110,8 @@ def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
             a, kvc = L.attention(
                 lp["attn"], hn, arch, sub["attn"], positions=positions,
                 causal=causal, kv_cache=(lc or {}).get("kv"),
-                cache_pos=cache_pos, q_chunk=q_chunk)
+                cache_pos=cache_pos, block_tables=block_tables,
+                q_chunk=q_chunk)
             y = L.attention_out(lp["attn"], a, sub["attn_out"])
             if kvc is not None:
                 nc["kv"] = kvc
@@ -190,8 +193,9 @@ REMAT_POLICIES = {
 
 
 def run_stack(h, stack_params, arch: ArchConfig, segments, *, positions,
-              causal=True, cache=None, cache_pos=None, memory=None,
-              q_chunk=512, time_chunk=64, remat=True, remat_policy="nothing"):
+              causal=True, cache=None, cache_pos=None, block_tables=None,
+              memory=None, q_chunk=512, time_chunk=64, remat=True,
+              remat_policy="nothing"):
     """Scan the unit stack segment by segment; returns (h, aux, new_cache)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_cache_parts = []
@@ -221,7 +225,8 @@ def run_stack(h, stack_params, arch: ArchConfig, segments, *, positions,
                 h, aux_u, nc = unit_forward(
                     h, unit_params, arch, _plan, positions=positions,
                     causal=causal, cache=unit_cache, cache_pos=cache_pos,
-                    memory=memory, q_chunk=q_chunk, time_chunk=time_chunk)
+                    block_tables=block_tables, memory=memory,
+                    q_chunk=q_chunk, time_chunk=time_chunk)
                 return (h, aux + aux_u), nc
 
             (h, aux_total), seg_new_cache = jax.lax.scan(
@@ -376,6 +381,26 @@ def init_cache(arch: ArchConfig, batch: int, max_len: int,
     return cache
 
 
+def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
+                     batch: int, dtype=jnp.bfloat16) -> dict:
+    """Paged variant of :func:`init_cache`: KV leaves are one global pool
+    of ``num_blocks`` fixed-size blocks ``(n_units, NB, block_size, KH,
+    hd)`` shared by all slots through a block table, instead of a dense
+    ``max_len`` row per slot.  Recurrent (mamba / wkv6 / shift) state is
+    O(1) in sequence length and stays slot-dense ``(n_units, batch,
+    ...)`` exactly as in the dense cache."""
+    dense = init_cache(arch, batch, 1, dtype)
+    KH, hd, n = arch.n_kv_heads, arch.hd, arch.n_units
+    cache: dict = {}
+    for lkey, c in dense.items():
+        cache[lkey] = {
+            k: ({"k": jnp.zeros((n, num_blocks, block_size, KH, hd), dtype),
+                 "v": jnp.zeros((n, num_blocks, block_size, KH, hd), dtype)}
+                if k == "kv" else v)
+            for k, v in c.items()}
+    return cache
+
+
 def prefill(params, batch: dict, cache: dict, arch: ArchConfig,
             plan: ModelPlan | None = None, *, q_chunk=512, time_chunk=64):
     """Process the prompt, filling ``cache``; returns (last_logits, cache)."""
@@ -422,16 +447,24 @@ def decode_positions(pos, batch: int):
 
 
 def decode_step(params, token: jax.Array, cache: dict, pos,
-                arch: ArchConfig, plan: ModelPlan | None = None):
+                arch: ArchConfig, plan: ModelPlan | None = None, *,
+                block_tables: jax.Array | None = None):
     """One decode step.  token: (B, 1) int32; pos: scalar int32 (current
     position = number of tokens already in the cache) or a (B,) vector of
-    per-slot positions (see :func:`decode_positions`)."""
+    per-slot positions (see :func:`decode_positions`).  With
+    ``block_tables`` ((B, pages) int32) the cache's KV leaves are the
+    paged block pool from :func:`init_paged_cache`; requires (B,)
+    per-slot positions."""
     plan = plan if plan is not None else uniform_plan(arch)
     h = L.embed(params["embed"], token, plan.embed)
     positions, cache_pos = decode_positions(pos, token.shape[0])
+    if block_tables is not None and cache_pos.ndim != 1:
+        raise ValueError("paged decode (block_tables) requires a (B,) "
+                         "per-slot pos vector")
     h, _, cache = run_stack(h, params["stack"], arch, plan.segments,
                             positions=positions, causal=True, cache=cache,
-                            cache_pos=cache_pos, remat=False)
+                            cache_pos=cache_pos, block_tables=block_tables,
+                            remat=False)
     h = L.apply_norm(params["final_norm"], h)
     h = constrain(h, plan.final_norm, ("batch", "seq", "d_model"))
     logits = L.lm_head(params["lm_head"], h, params["embed"], arch,

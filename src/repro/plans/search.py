@@ -32,10 +32,14 @@ STRATEGIES = ("uniform", "data", "model", "owt", "searched")
 
 def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
                       seq_len: int, batch: int,
+                      kv_tokens: int | None = None,
                       options: SearchOptions | None = None,
                       ) -> tuple[ModelPlan, dict]:
-    """Search one phase; returns (realized plan, provenance dict)."""
-    shape = phase_shape(phase, seq_len=seq_len, batch=batch)
+    """Search one phase; returns (realized plan, provenance dict).
+    ``kv_tokens`` prices the decode phase's cache read at the paged
+    engine's allocated-blocks depth (see :func:`phase_shape`)."""
+    shape = phase_shape(phase, seq_len=seq_len, batch=batch,
+                        kv_tokens=kv_tokens)
     graph = export_graph(arch, shape)
     strat = find_strategy(graph, mesh, phase=phase, options=options)
     prov = {
@@ -50,9 +54,11 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
 
 def baseline_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str,
                         strategy: str, *, seq_len: int, batch: int,
+                        kv_tokens: int | None = None,
                         ) -> tuple[ModelPlan, dict]:
     """Apply a named baseline (data/model/owt) to one phase's graph."""
-    shape = phase_shape(phase, seq_len=seq_len, batch=batch)
+    shape = phase_shape(phase, seq_len=seq_len, batch=batch,
+                        kv_tokens=kv_tokens)
     graph = export_graph(arch, shape)
     strat = BASELINES[strategy](graph, mesh)
     prov = {"phase": phase,
@@ -67,14 +73,18 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                         train_seq: int = 4096, train_batch: int = 256,
                         prompt_len: int = 512,
                         max_batch: int = 8, max_len: int | None = None,
+                        decode_kv_tokens: int | None = None,
                         options: SearchOptions | None = None) -> ParallelPlan:
     """Build a ParallelPlan for ``phases`` under one named strategy.
 
     Phase shapes: train prices ``(train_batch, train_seq)``; prefill a
     batch-1 ``prompt_len`` sequence; decode a ``max_batch``-slot
     single-token batch against a ``max_len`` cache (default
-    ``prompt_len`` when unset).  ``mesh=None`` (single device) degrades
-    to the uniform plan regardless of ``strategy``.
+    ``prompt_len`` when unset) — or, when ``decode_kv_tokens`` is given
+    (the paged engine's per-slot allocated-block budget), against that
+    real depth instead of the ``max_len`` reservation.  ``mesh=None``
+    (single device) degrades to the uniform plan regardless of
+    ``strategy``.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
@@ -94,13 +104,15 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     phase_meta: dict[str, dict] = {}
     for phase in phases:
         seq_len, batch = shapes[phase]
+        kv = decode_kv_tokens if phase == "decode" else None
         if strategy == "searched":
             plans[phase], phase_meta[phase] = search_phase_plan(
                 arch, mesh, phase, seq_len=seq_len, batch=batch,
-                options=options)
+                kv_tokens=kv, options=options)
         else:
             plans[phase], phase_meta[phase] = baseline_phase_plan(
-                arch, mesh, phase, strategy, seq_len=seq_len, batch=batch)
+                arch, mesh, phase, strategy, seq_len=seq_len, batch=batch,
+                kv_tokens=kv)
     import jax
 
     return ParallelPlan(
@@ -115,6 +127,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                  train_seq: int = 4096, train_batch: int = 256,
                  prompt_len: int = 512, max_batch: int = 8,
                  max_len: int | None = None,
+                 decode_kv_tokens: int | None = None,
                  options: SearchOptions | None = None,
                  log=print) -> ParallelPlan:
     """The plan tri-logic every driver shares: ``plan_path`` (load,
@@ -149,7 +162,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             arch, mesh, strategy=strategy, phases=phases,
             train_seq=train_seq, train_batch=train_batch,
             prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
-            options=options)
+            decode_kv_tokens=decode_kv_tokens, options=options)
         for phase, pm in plan.meta.get("phases", {}).items():
             cost = pm.get("cost_s")
             if cost is not None:

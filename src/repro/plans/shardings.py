@@ -168,9 +168,17 @@ def batch_pspecs(batch, plan: ModelPlan):
     return jax.tree_util.tree_map_with_path(one, batch)
 
 
-def cache_pspecs(cache, arch: ArchConfig, plan: ModelPlan):
+def cache_pspecs(cache, arch: ArchConfig, plan: ModelPlan, *,
+                 paged: bool = False):
     """KV/state cache: batch by embed batch axes; KV heads / channels by the
-    dominant plan's mixer config."""
+    dominant plan's mixer config.
+
+    With ``paged=True`` the KV leaves are the serve engine's block pool
+    ``(units, num_blocks, block_size, KH, hd)``: the block and in-block
+    token axes stay replicated (any slot's table can point at any block,
+    so there is no batch/seq meaning to shard over) while heads follow
+    the searched decode-phase config exactly as in the dense layout.
+    """
     dec_plan = dominant_unit_plan(plan.segments)
 
     def leaf_spec(path, leaf) -> P:
@@ -186,6 +194,9 @@ def cache_pspecs(cache, arch: ArchConfig, plan: ModelPlan):
         sub = dec_plan[j] if dec_plan else {}
         if "kv" in flat:
             cfg = sub.get("attn", R)
+            if paged:
+                # (units, num_blocks, block_size, KH, hd)
+                return pspec(cfg, (None, None, None, "heads", None))
             # (units, B, S, KH, hd)
             return pspec(cfg, (None, "batch", "seq", "heads", None))
         if "ssm_state" in flat:

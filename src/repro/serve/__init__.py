@@ -1,11 +1,14 @@
-"""Continuous-batching serving subsystem (slot-pooled KV cache, per-slot
-decode positions, admit/retire mid-decode), phase-aware: prefill and
-decode execute under their own phase of a
+"""Continuous-batching serving subsystem (paged block-pooled KV cache,
+per-slot decode positions, admit/retire mid-decode), phase-aware:
+prefill and decode execute under their own phase of a
 :class:`~repro.plans.parallel_plan.ParallelPlan`."""
 
-from .engine import ServeEngine, write_slot
+from .engine import ServeEngine, write_slot, write_slot_paged
 from .fns import make_serve_fns
+from .paging import BlockAllocator, PoolExhausted, blocks_for_request
 from .scheduler import Completion, Request, SlotScheduler, SlotState
 
-__all__ = ["Completion", "Request", "ServeEngine", "SlotScheduler",
-           "SlotState", "make_serve_fns", "write_slot"]
+__all__ = ["BlockAllocator", "Completion", "PoolExhausted", "Request",
+           "ServeEngine", "SlotScheduler", "SlotState",
+           "blocks_for_request", "make_serve_fns", "write_slot",
+           "write_slot_paged"]

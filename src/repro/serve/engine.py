@@ -1,31 +1,42 @@
-"""Continuous-batching serve engine: slot-pooled KV cache, per-slot
-decode positions, admit/retire mid-decode.
+"""Continuous-batching serve engine: paged (block-pooled) KV cache,
+per-slot decode positions, admit/retire mid-decode.
 
 The paper's thesis is that one global parallelization strategy wastes
 hardware because different layers want different dimensions; the old
 serving path made the same mistake in *time* — every request in a batch
 was forced into lockstep prefill->decode behind a single scalar position,
 so short requests padded out to the longest and freed cache slots sat
-idle.  The per-slot ``kv_len`` masking of the FlashDecoding-style kernel
-(arXiv:2311.01282) makes ragged decode a *scheduling* problem, not a
-kernel problem; this engine is that scheduler:
+idle.  The slot-pooled engine fixed the time dimension but still made it
+in *space*: every slot reserved a dense ``max_len`` KV row, so memory
+was priced for the worst case while actual requests are ragged.  This
+engine closes both:
 
-* a fixed pool of ``max_batch`` cache slots (rows of one pooled KV /
-  recurrent-state tree, allocated once up front);
-* queued requests are prefilled at their exact prompt length (batch 1)
-  and their cache row scattered into a free slot (:func:`write_slot`
-  overwrites the *entire* row, so a retired request's KV and mamba/wkv6
-  state can never leak into its successor);
+* KV lives in one global pool of fixed-size **blocks**
+  (``kv_block_size`` tokens each) plus a per-slot **block table**
+  (vLLM's PagedAttention, arXiv:2309.06180); blocks are bound lazily as
+  a slot's position crosses a block boundary and returned to the free
+  list on retire.  Recurrent (mamba / wkv6) state is O(1) in sequence
+  length and stays slot-dense; ``kv_block_size=0`` keeps the dense
+  per-slot rows (the A/B baseline).
+* queued requests are prefilled at their exact prompt length (batch 1,
+  cache row rounded up to whole blocks) and scattered into their slot's
+  blocks (:func:`write_slot_paged` overwrites every prompt block *in
+  full* and the recurrent row, so a retired request's state can never
+  leak into its successor; later blocks are bound lazily and their stale
+  contents are dead under the per-slot ``kv_len`` mask);
 * every decode step runs all ``max_batch`` slots as one ragged
   single-token batch with per-slot positions ``(B,)`` — each row RoPE'd,
-  cache-scattered and length-masked at its own depth;
+  block-scattered and length-masked at its own depth by the
+  ``paged_decode_attention`` op;
 * slots retire on EOS or ``max_new_tokens`` and immediately take new
   work (policy "continuous") or wait for the pool to drain (policy
-  "static", the lockstep oracle).
+  "static", the lockstep oracle).  Admission reserves each request's
+  *worst-case block need* — under paging the binding resource is blocks,
+  not slots, so many short requests coexist where few long ones fit.
 
-Decode steps of free slots run as padding rows: their outputs are
-ignored and their rows fully overwritten at the next admission, which
-keeps every decode call the same shape (one compiled trace).
+Decode steps of free slots run as padding rows: their block tables point
+at physical block 0 (the trash block), so their ignored writes can never
+touch a live request.
 
 Scope: decoder-only LMs (``repro.models.lm`` — dense / MoE / RWKV /
 Mamba-hybrid / VLM text path).  The encoder-decoder arch keeps the
@@ -50,11 +61,13 @@ from repro.plans import cache_pspecs, to_shardings
 from repro.plans.parallel_plan import ParallelPlan, as_model_plan
 
 from .fns import make_serve_fns
+from .paging import BlockAllocator, PoolExhausted
 from .scheduler import Completion, Request, SlotScheduler
 
 
 def write_slot(pool: dict, row: dict, slot) -> dict:
-    """Overwrite slot ``slot`` of the pooled cache with a batch-1 cache.
+    """Overwrite slot ``slot`` of the dense pooled cache with a batch-1
+    cache.
 
     Every leaf is (n_units, B, ...) vs (n_units, 1, ...); the whole row is
     replaced — including KV positions beyond the new request's prompt and
@@ -65,8 +78,35 @@ def write_slot(pool: dict, row: dict, slot) -> dict:
         lambda p, r: p.at[:, slot].set(r[:, 0].astype(p.dtype)), pool, row)
 
 
+def _is_kv_path(path) -> bool:
+    return any(getattr(k, "key", None) == "kv" for k in path)
+
+
+def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
+    """Paged admission write: scatter the batch-1 prefill row into the
+    slot's physical blocks and its recurrent-state row.
+
+    KV leaves: ``row`` is (n_units, 1, nb*block_size, KH, hd) — exactly
+    the prompt rounded up to whole blocks — and lands in pool blocks
+    ``block_ids`` ((nb,) int32), each overwritten *in full* (the rounding
+    padding is the prefill row's zeros, so no previous occupant's KV
+    survives in any prompt block).  Every other leaf is the dense
+    slot-row overwrite of :func:`write_slot`.
+    """
+    nb = block_ids.shape[0]
+
+    def one(path, p, r):
+        if _is_kv_path(path):
+            n, _, bs = p.shape[:3]
+            rb = r[:, 0].reshape(n, nb, bs, *p.shape[3:])
+            return p.at[:, block_ids].set(rb.astype(p.dtype))
+        return p.at[:, slot].set(r[:, 0].astype(p.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, pool, row)
+
+
 class ServeEngine:
-    """Drives generation over a slot-pooled cache.
+    """Drives generation over a block-pooled (or dense slot-pooled) cache.
 
     Usage::
 
@@ -80,12 +120,21 @@ class ServeEngine:
         engine.submit(req)
         while engine.busy:
             for c in engine.step(): ...
+
+    ``kv_block_size`` (tokens per block, default 128) pages the KV cache;
+    0 keeps dense ``max_len`` rows.  ``kv_pool_blocks`` bounds the pool
+    (usable blocks, trash block excluded); default is dense-equivalent
+    capacity — pass less to serve the same slots in a fraction of the
+    memory (admission then gates on the block budget and ``submit``
+    raises :class:`PoolExhausted` for requests that can never fit).
     """
 
     def __init__(self, params, arch: ArchConfig, *, max_batch: int,
                  max_len: int, plan: ParallelPlan | ModelPlan | None = None,
                  q_chunk: int = 256, kernel_backend: str | None = None,
-                 dtype=jnp.float32, policy: str = "continuous"):
+                 dtype=jnp.float32, policy: str = "continuous",
+                 kv_block_size: int | None = 128,
+                 kv_pool_blocks: int | None = None):
         if arch.enc_layers:
             raise NotImplementedError(
                 "ServeEngine covers decoder-only LMs; encoder-decoder "
@@ -96,6 +145,11 @@ class ServeEngine:
         self.max_len = int(max_len)
         self.dtype = dtype
         self._mod = model_module(arch)
+        # paging only applies to dense-KV archs: a pure-recurrent stack
+        # (e.g. RWKV) has no KV leaves to page.
+        has_attn = any(spec.mixer == "attn" for spec in arch.pattern)
+        self.block_size = int(kv_block_size or 0) if has_attn else 0
+        self.paged = self.block_size > 0
         # phase-aware: prefill runs under the plan's prefill phase, the
         # ragged decode step under its decode phase (a bare ModelPlan
         # applies to both — the pre-phase API).
@@ -103,20 +157,34 @@ class ServeEngine:
         self._decode_plan = as_model_plan(plan, arch, "decode")
         self._prefill, self._decode = make_serve_fns(
             arch, plan, q_chunk=q_chunk, kernel_backend=kernel_backend,
-            jit=True)
-        self._write = jax.jit(write_slot, donate_argnums=(0,))
-        self.cache = self._mod.init_cache(arch, self.max_batch, self.max_len,
-                                          dtype)
+            jit=True, paged=self.paged)
+        if self.paged:
+            pages = -(-self.max_len // self.block_size)
+            usable = (int(kv_pool_blocks) if kv_pool_blocks
+                      else self.max_batch * pages)
+            self._alloc = BlockAllocator(usable + 1, self.block_size,
+                                         self.max_batch, pages)
+            self._write = jax.jit(write_slot_paged, donate_argnums=(0,))
+            self.cache = self._mod.init_paged_cache(
+                arch, usable + 1, self.block_size, self.max_batch, dtype)
+            self.scheduler = SlotScheduler(
+                self.max_batch, policy, block_size=self.block_size,
+                total_blocks=usable, max_len=self.max_len)
+        else:
+            self._alloc = None
+            self._write = jax.jit(write_slot, donate_argnums=(0,))
+            self.cache = self._mod.init_cache(arch, self.max_batch,
+                                              self.max_len, dtype)
+            self.scheduler = SlotScheduler(self.max_batch, policy)
         mesh = current_mesh()
         if mesh is not None:
             # lay the pooled cache out under the decode phase's
             # PartitionSpecs once, up front; the jitted decode step
             # (cache donated) keeps the layout for the engine's lifetime.
             c_sh = to_shardings(
-                cache_pspecs(self.cache, arch, self._decode_plan), mesh,
-                like=self.cache)
+                cache_pspecs(self.cache, arch, self._decode_plan,
+                             paged=self.paged), mesh, like=self.cache)
             self.cache = jax.device_put(self.cache, c_sh)
-        self.scheduler = SlotScheduler(self.max_batch, policy)
         self.queue: deque[Request] = deque()
         self._tok = np.zeros((self.max_batch,), np.int32)
         self._pos = np.zeros((self.max_batch,), np.int32)
@@ -131,12 +199,51 @@ class ServeEngine:
     def busy(self) -> bool:
         return bool(self.queue) or bool(self.scheduler.active)
 
+    @property
+    def kv_bytes_reserved(self) -> int:
+        """Bytes physically allocated for KV (the block pool, or the
+        dense slot rows) — the memory the paging is meant to shrink."""
+        return sum(
+            leaf.size * leaf.dtype.itemsize
+            for path, leaf in jax.tree_util.tree_flatten_with_path(
+                self.cache)[0]
+            if _is_kv_path(path))
+
+    @property
+    def peak_blocks_in_use(self) -> int:
+        return self._alloc.peak_in_use if self.paged else 0
+
+    def _prompt_row_len(self, prompt_len: int) -> int:
+        """Length of the batch-1 prefill cache row: the prompt rounded up
+        to whole blocks under paging (cheaper than the dense engine's
+        full ``max_len`` row), ``max_len`` otherwise."""
+        if not self.paged:
+            return self.max_len
+        return -(-prompt_len // self.block_size) * self.block_size
+
     def submit(self, request: Request) -> None:
-        if len(request.prompt) + request.max_new_tokens > self.max_len:
+        """Queue ``request``.  A prompt longer than ``max_len`` can never
+        occupy a cache row and is rejected; ``prompt + max_new_tokens``
+        may exceed ``max_len`` — generation then truncates at the row
+        budget (finish_reason "length") instead of being refused up
+        front, since EOS usually lands far earlier.  Under paging a
+        request whose worst-case block need exceeds the whole pool
+        raises :class:`PoolExhausted` (a smaller *current* free list
+        just queues it)."""
+        plen = len(request.prompt)
+        if plen > self.max_len:
             raise ValueError(
-                f"request {request.uid}: prompt ({len(request.prompt)}) + "
-                f"max_new_tokens ({request.max_new_tokens}) exceeds the "
-                f"cache pool length {self.max_len}")
+                f"request {request.uid}: prompt length {plen} exceeds the "
+                f"cache row budget max_len={self.max_len}")
+        if self.paged:
+            need = self.scheduler.blocks_for(request)
+            usable = self._alloc.num_blocks - 1
+            if need > usable:
+                raise PoolExhausted(
+                    f"request {request.uid} needs {need} KV blocks worst-"
+                    f"case (prompt {plen} + max_new "
+                    f"{request.max_new_tokens}, block_size "
+                    f"{self.block_size}) but the pool holds {usable}")
         self.queue.append(request)
 
     def warmup(self, prompt_lens=()) -> float:
@@ -144,21 +251,32 @@ class ServeEngine:
         ragged decode step and the slot write *before* anything is timed;
         returns the seconds spent (jit compile + first run).  The dummy
         traffic flows through the engine's own pool — harmless, since
-        admission overwrites the whole slot row and free rows are never
-        read."""
+        admission overwrites the whole slot row (all prompt blocks under
+        paging) and free rows are never read."""
         t0 = time.perf_counter()
         for plen in sorted({int(p) for p in prompt_lens}):
-            row = self._mod.init_cache(self.arch, 1, self.max_len, self.dtype)
+            row = self._mod.init_cache(self.arch, 1,
+                                       self._prompt_row_len(plen),
+                                       self.dtype)
             logits, row = self._prefill(
                 self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)}, row)
-            self.cache = self._write(self.cache, row, 0)
+            if self.paged:
+                nb = -(-plen // self.block_size)
+                trash = jnp.zeros((nb,), jnp.int32)
+                self.cache = self._write(self.cache, row, 0, trash)
+            else:
+                self.cache = self._write(self.cache, row, 0)
             # exercise the full sampling hot path — the eager argmax /
             # host transfer compiles too, and must not be charged to the
             # first request served
             int(jax.device_get(jnp.argmax(logits[0, -1])))
-        logits, self.cache = self._decode(
-            self.params, jnp.zeros((self.max_batch, 1), jnp.int32),
-            self.cache, jnp.zeros((self.max_batch,), jnp.int32))
+        decode_args = (self.params,
+                       jnp.zeros((self.max_batch, 1), jnp.int32),
+                       self.cache,
+                       jnp.zeros((self.max_batch,), jnp.int32))
+        if self.paged:
+            decode_args += (jnp.asarray(self._alloc.tables),)
+        logits, self.cache = self._decode(*decode_args)
         np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)), np.int32)
         dt = time.perf_counter() - t0
         self.stats["compile_s"] += dt
@@ -170,9 +288,17 @@ class ServeEngine:
         slot = self.scheduler.admit(req)
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
-        row = self._mod.init_cache(self.arch, 1, self.max_len, self.dtype)
+        row = self._mod.init_cache(self.arch, 1,
+                                   self._prompt_row_len(len(req.prompt)),
+                                   self.dtype)
         logits, row = self._prefill(self.params, {"tokens": tokens}, row)
-        self.cache = self._write(self.cache, row, slot)
+        if self.paged:
+            nb = -(-len(req.prompt) // self.block_size)
+            ids = [self._alloc.alloc(slot, page) for page in range(nb)]
+            self.cache = self._write(self.cache, row, slot,
+                                     jnp.asarray(ids, jnp.int32))
+        else:
+            self.cache = self._write(self.cache, row, slot)
         first = int(jax.device_get(jnp.argmax(logits[0, -1])))
         self.stats["prefill_s"] += time.perf_counter() - t0
         self.stats["prefill_tokens"] += len(req.prompt)
@@ -191,29 +317,42 @@ class ServeEngine:
             reason = "eos"
         elif len(st.generated) >= req.max_new_tokens:
             reason = "length"
-        elif st.pos >= self.max_len:      # defensive: cache row exhausted
+        elif st.pos >= self.max_len:      # cache row budget exhausted
             reason = "length"
         if reason is None:
             return []
         self.scheduler.retire(slot)
-        self._tok[slot] = 0
+        if self.paged:
+            self._alloc.free_slot(slot)   # blocks back to the free list;
+        self._tok[slot] = 0               # the table row points at trash
         self._pos[slot] = 0               # free rows park their (ignored)
         self.stats["retired"] += 1        # writes at position 0
         return [Completion(uid=req.uid, tokens=list(st.generated),
                            prompt_len=len(req.prompt), finish_reason=reason)]
 
     def step(self) -> list[Completion]:
-        """Admit every admissible queued request, then run one ragged
-        decode step over the pool; returns the requests that finished."""
+        """Admit every admissible queued request (free slot *and*, under
+        paging, enough unreserved blocks), then run one ragged decode
+        step over the pool; returns the requests that finished."""
         done: list[Completion] = []
-        for _ in range(self.scheduler.admissible(len(self.queue))):
+        for _ in range(self.scheduler.admissible_requests(self.queue)):
             done.extend(self._admit_one())
         active = self.scheduler.active
         if active:
             t0 = time.perf_counter()
-            logits, self.cache = self._decode(
-                self.params, jnp.asarray(self._tok)[:, None], self.cache,
-                jnp.asarray(self._pos))
+            if self.paged:
+                for slot, st in active.items():
+                    # lazy boundary crossing: bind the block this step's
+                    # write lands in (draws from the slot's reservation,
+                    # so it cannot fail)
+                    self._alloc.ensure(slot, st.pos)
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(self._tok)[:, None], self.cache,
+                    jnp.asarray(self._pos), jnp.asarray(self._alloc.tables))
+            else:
+                logits, self.cache = self._decode(
+                    self.params, jnp.asarray(self._tok)[:, None], self.cache,
+                    jnp.asarray(self._pos))
             nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
                              np.int32)
             self.stats["decode_s"] += time.perf_counter() - t0

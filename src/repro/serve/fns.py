@@ -24,12 +24,16 @@ from repro.plans.parallel_plan import ParallelPlan, as_model_plan
 def make_serve_fns(arch: ArchConfig,
                    plan: ParallelPlan | ModelPlan | None = None,
                    q_chunk: int = 512, kernel_backend: str | None = None,
-                   *, jit: bool = False):
+                   *, jit: bool = False, paged: bool = False):
     """Build ``(prefill, decode_step)``.
 
     ``decode_step`` takes ``pos`` as a scalar (static lockstep batch) or a
     ``(B,)`` vector of per-slot positions (the continuous-batching serve
-    engine's ragged decode).
+    engine's ragged decode).  With ``paged=True`` the decode fn runs over
+    the block pool — ``decode_step(params, token, cache, pos,
+    block_tables)`` with a ``(B, pages)`` int32 table and (B,) per-slot
+    positions; prefill is unchanged (it fills a dense batch-1 row the
+    engine scatters into the slot's blocks).
 
     With ``jit=True`` both come back jitted with the cache argument
     donated.  Donating *prefill*'s cache matters as much as decode's: the
@@ -46,10 +50,17 @@ def make_serve_fns(arch: ArchConfig,
             return mod.prefill(params, batch, cache, arch, prefill_plan,
                                q_chunk=q_chunk)
 
-    def decode_step(params, token, cache, pos):
-        with kernel_dispatch.force_backend(kernel_backend):
-            return mod.decode_step(params, token, cache, pos, arch,
-                                   decode_plan)
+    if paged:
+        def decode_step(params, token, cache, pos, block_tables):
+            with kernel_dispatch.force_backend(kernel_backend):
+                return mod.decode_step(params, token, cache, pos, arch,
+                                       decode_plan,
+                                       block_tables=block_tables)
+    else:
+        def decode_step(params, token, cache, pos):
+            with kernel_dispatch.force_backend(kernel_backend):
+                return mod.decode_step(params, token, cache, pos, arch,
+                                       decode_plan)
 
     if not jit:
         return prefill, decode_step

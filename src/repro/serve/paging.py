@@ -1,0 +1,99 @@
+"""Host-side block bookkeeping for the paged KV cache.
+
+The device side (the block pool, the scatter writes, the paged
+flash-decode kernel) lives in :mod:`repro.models.lm` and
+:mod:`repro.kernels`; this module owns the pure-Python free list and the
+per-slot block tables the engine pushes to the device each decode step.
+
+Physical block 0 is the **trash block**: it is never handed out, every
+free slot's table points at it (tables are zeroed on retire), and the
+ignored decode writes of free slots land there — so the pool can be
+shared without a free slot ever corrupting a live one.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class PoolExhausted(RuntimeError):
+    """The request can never be served by this engine's block pool: its
+    worst-case block need exceeds the pool (raised at ``submit`` — a
+    too-small *current* free list just queues the request instead)."""
+
+
+def blocks_for_request(prompt_len: int, max_new_tokens: int,
+                       max_len: int, block_size: int) -> int:
+    """Worst-case blocks a request can ever occupy: the cache holds the
+    prompt plus every generated token except the last sampled one
+    (which is never written), capped at the engine's ``max_len`` row
+    budget."""
+    tokens = min(prompt_len + max_new_tokens - 1, max_len)
+    return -(-tokens // block_size)
+
+
+class BlockAllocator:
+    """Free list over ``num_blocks`` physical blocks plus the per-slot
+    block tables (``(max_batch, pages)`` int32; entry 0 = unallocated /
+    trash).  Blocks are handed out lazily and returned on retire;
+    ``peak_in_use`` tracks the high-water mark for the benchmark's
+    ``peak_blocks_in_use`` field."""
+
+    def __init__(self, num_blocks: int, block_size: int, max_batch: int,
+                 pages_per_slot: int):
+        if num_blocks < 2:
+            raise ValueError(f"need >= 2 blocks (1 trash + 1 usable), "
+                             f"got {num_blocks}")
+        self.num_blocks = int(num_blocks)
+        self.block_size = int(block_size)
+        self.tables = np.zeros((max_batch, pages_per_slot), np.int32)
+        self._free = list(range(num_blocks - 1, 0, -1))  # pop() -> lowest id
+        self._owned: list[list[int]] = [[] for _ in range(max_batch)]
+        self.peak_in_use = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def slot_blocks(self, slot: int) -> list[int]:
+        return list(self._owned[slot])
+
+    def alloc(self, slot: int, page: int) -> int:
+        """Bind a fresh physical block to logical ``page`` of ``slot``."""
+        if not self._free:
+            raise PoolExhausted(
+                f"KV block pool exhausted ({self.num_blocks - 1} usable "
+                f"blocks, all in use) — the scheduler's reservation "
+                f"accounting should have prevented this")
+        if self.tables[slot, page]:
+            raise ValueError(f"slot {slot} page {page} already mapped to "
+                             f"block {self.tables[slot, page]}")
+        block = self._free.pop()
+        self.tables[slot, page] = block
+        self._owned[slot].append(block)
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return block
+
+    def ensure(self, slot: int, pos: int) -> bool:
+        """Make sure the block holding token position ``pos`` of ``slot``
+        is mapped (the lazy boundary-crossing allocation); returns True
+        when a new block was bound."""
+        page = pos // self.block_size
+        if self.tables[slot, page]:
+            return False
+        self.alloc(slot, page)
+        return True
+
+    def free_slot(self, slot: int) -> int:
+        """Return all of ``slot``'s blocks to the free list and point its
+        table back at the trash block; returns the number freed."""
+        blocks = self._owned[slot]
+        n = len(blocks)
+        self._free.extend(sorted(blocks, reverse=True))
+        self._owned[slot] = []
+        self.tables[slot, :] = 0
+        return n

@@ -12,6 +12,15 @@ bookkeeping of which slot holds which request.  Two admission policies:
   prefill->decode oracle the old driver implemented; kept behind
   ``--no-continuous`` as the equivalence/throughput baseline).
 
+Under a **paged** KV cache the binding resource is blocks, not slots:
+construct with ``block_size``/``total_blocks`` and admission reserves
+each request's worst-case block need
+(:func:`repro.serve.paging.blocks_for_request`) up front — many short
+requests can coexist where few long ones fit, and a slot can never hit
+an empty free list mid-decode (its lazy allocations draw from its own
+reservation).  Reservations release on retire, so an EOS-at-short-length
+hands its unused budget straight back to the queue.
+
 Everything here is pure Python — no jax.  The device-side work (prefill,
 per-slot decode, slot writes) lives in :mod:`repro.serve.engine`.
 """
@@ -19,6 +28,8 @@ per-slot decode, slot writes) lives in :mod:`repro.serve.engine`.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+from .paging import blocks_for_request
 
 
 @dataclass(frozen=True)
@@ -56,18 +67,23 @@ class Completion:
 class SlotState:
     """Device-slot bookkeeping for one in-flight request: ``pos`` is the
     next cache write position (== tokens currently in the slot's cache
-    row), ``generated`` the tokens sampled so far."""
+    row), ``generated`` the tokens sampled so far, ``reserved_blocks``
+    the worst-case block budget held under a paged cache."""
     request: Request
     pos: int
     generated: list[int] = field(default_factory=list)
+    reserved_blocks: int = 0
 
 
 class SlotScheduler:
-    """Assigns queued requests to free cache slots under a policy."""
+    """Assigns queued requests to free cache slots under a policy,
+    optionally bounded by a paged-cache block budget."""
 
     POLICIES = ("continuous", "static")
 
-    def __init__(self, max_batch: int, policy: str = "continuous"):
+    def __init__(self, max_batch: int, policy: str = "continuous", *,
+                 block_size: int = 0, total_blocks: int = 0,
+                 max_len: int = 0):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if policy not in self.POLICIES:
@@ -75,7 +91,27 @@ class SlotScheduler:
                              f"expected one of {self.POLICIES}")
         self.max_batch = max_batch
         self.policy = policy
+        self.block_size = int(block_size)
+        self.total_blocks = int(total_blocks)   # usable (trash excluded)
+        self.max_len = int(max_len)
         self._slots: list[SlotState | None] = [None] * max_batch
+
+    def blocks_for(self, request: Request) -> int:
+        """Worst-case block reservation for ``request`` (0 when block
+        accounting is off — slot-only admission)."""
+        if not self.block_size:
+            return 0
+        return blocks_for_request(len(request.prompt),
+                                  request.max_new_tokens,
+                                  self.max_len, self.block_size)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return sum(s.reserved_blocks for s in self._slots if s is not None)
+
+    @property
+    def free_block_budget(self) -> int:
+        return self.total_blocks - self.reserved_blocks
 
     # ---------------------------------------------------------------- #
     @property
@@ -94,20 +130,49 @@ class SlotScheduler:
 
     # ---------------------------------------------------------------- #
     def admissible(self, queued: int) -> int:
-        """How many of ``queued`` waiting requests may be admitted now."""
+        """How many of ``queued`` waiting requests may be admitted now
+        (slot accounting only — the pre-paging form, kept for callers
+        without request visibility)."""
         free = len(self.free_slots())
         if self.policy == "continuous":
             return min(free, queued)
         # static: only form a fresh batch once the pool is fully drained
         return min(free, queued) if free == self.max_batch else 0
 
+    def admissible_requests(self, requests) -> int:
+        """How many of ``requests`` (the queue, FCFS order) may be
+        admitted now: bounded by free slots and, under block accounting,
+        by the unreserved block budget.  Admission stays in arrival
+        order — the count stops at the first request that does not fit,
+        so a large request is never starved by later small ones."""
+        limit = self.admissible(len(requests))
+        if not self.block_size:
+            return limit
+        budget = self.free_block_budget
+        n = 0
+        for req in list(requests)[:limit]:
+            need = self.blocks_for(req)
+            if need > budget:
+                break
+            budget -= need
+            n += 1
+        return n
+
     def admit(self, request: Request) -> int:
-        """Place ``request`` in the lowest free slot; returns the slot."""
+        """Place ``request`` in the lowest free slot (reserving its block
+        budget under block accounting); returns the slot."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
+        need = self.blocks_for(request)
+        if self.block_size and need > self.free_block_budget:
+            raise RuntimeError(
+                f"request {request.uid} needs {need} blocks but only "
+                f"{self.free_block_budget} are unreserved")
         slot = free[0]
-        self._slots[slot] = SlotState(request=request, pos=len(request.prompt))
+        self._slots[slot] = SlotState(request=request,
+                                      pos=len(request.prompt),
+                                      reserved_blocks=need)
         return slot
 
     def retire(self, slot: int) -> SlotState:

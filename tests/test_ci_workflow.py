@@ -21,6 +21,11 @@ def _all_run_lines(job):
     return "\n".join(s.get("run", "") for s in job["steps"])
 
 
+def _triggers(wf):
+    # pyyaml parses the bare `on:` key as boolean True
+    return wf.get("on", wf.get(True))
+
+
 def test_workflow_parses_with_expected_jobs():
     wf = _load()
     assert set(wf["jobs"]) == {"lint", "test", "bench-smoke"}
@@ -28,6 +33,29 @@ def test_workflow_parses_with_expected_jobs():
         assert "runs-on" in job and job["steps"], name
         for step in job["steps"]:
             assert "uses" in step or "run" in step, (name, step)
+
+
+def test_workflow_cancels_superseded_runs_and_bounds_job_time():
+    """Stacked pushes must cancel in-flight runs of the same ref, and
+    every job needs an explicit timeout — a hung Pallas-interpret test
+    otherwise burns the 6-hour GitHub default."""
+    wf = _load()
+    conc = wf["concurrency"]
+    assert conc["cancel-in-progress"] is True
+    assert "github.ref" in conc["group"]
+    for name, job in wf["jobs"].items():
+        assert isinstance(job.get("timeout-minutes"), int), (
+            f"job {name!r} has no timeout-minutes")
+        assert job["timeout-minutes"] <= 60, name
+
+
+def test_workflow_has_weekly_schedule_trigger():
+    """The perf trajectory must accumulate even without pushes."""
+    trig = _triggers(_load())
+    crons = [e["cron"] for e in trig.get("schedule", [])]
+    assert crons, "no schedule: trigger"
+    # weekly: a 5-field cron with a concrete day-of-week
+    assert any(c.split()[4] != "*" for c in crons), crons
 
 
 def test_workflow_test_job_runs_tier1_on_jax_matrix():
@@ -54,12 +82,39 @@ def test_workflow_bench_job_uploads_artifact():
     runs = _all_run_lines(job)
     assert "benchmarks.perf_iterations" in runs
     # the serving perf trajectory rides the same job/artifact: continuous
-    # vs static-oracle throughput lands in BENCH_serving.json
+    # vs static-oracle (and paged vs dense) lands in BENCH_serving.json
     assert "benchmarks.serving_throughput" in runs
     assert "BENCH_serving.json" in runs
     uploads = [s for s in job["steps"]
                if str(s.get("uses", "")).startswith("actions/upload-artifact")]
     assert uploads and "BENCH_" in uploads[0]["with"]["path"]
+
+
+def test_workflow_bench_job_gates_on_previous_run():
+    """bench-smoke is a regression *gate*, not just an artifact upload:
+    the previous run's BENCH_serving.json is restored from a device-kind
+    cache key, compared via benchmarks.compare_bench with a 15%%
+    tolerance, and this run's report is saved back as the new baseline."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    runs = _all_run_lines(job)
+    assert "benchmarks.compare_bench" in runs
+    assert "--max-regression 0.15" in runs
+    restores = [s for s in job["steps"]
+                if str(s.get("uses", "")).startswith("actions/cache/restore")]
+    saves = [s for s in job["steps"]
+             if str(s.get("uses", "")).startswith("actions/cache/save")]
+    assert restores and saves
+    # keyed on device kind so a CPU baseline never gates a TPU run
+    assert "cpu" in restores[0]["with"]["key"]
+    assert "restore-keys" in restores[0]["with"]
+    assert "cpu" in saves[0]["with"]["key"]
+    # the comparison runs before the baseline refresh: the gate must see
+    # the restored previous report, not this run's copy
+    names = [s.get("name", "") for s in job["steps"]]
+    gate = next(i for i, n in enumerate(names) if "regression gate" in n.lower())
+    refresh = next(i for i, n in enumerate(names) if "refresh" in n.lower())
+    assert gate < refresh
 
 
 def test_workflow_bench_job_exercises_searched_phase_plan():
@@ -103,3 +158,75 @@ def test_compat_grep_passes_on_clean_tree_and_fails_on_violation(tmp_path):
     (bad / "oops.py").unlink()
     (bad / "compat.py").write_text("CompilerParams = None\n")
     assert _compat_grep(tmp_path) == 0
+
+
+def test_compare_bench_gate_logic():
+    """The regression gate the bench-smoke job runs: strict on the
+    deterministic KV bytes, noise-floored on the timing ratio, and loud
+    when a watched metric disappears from the current report."""
+    import sys
+    sys.path.insert(0, str(ROOT))
+    from benchmarks.compare_bench import compare
+
+    base = {"continuous_speedup": 1.34,
+            "kv_reserved_frac": 0.33,
+            "modes": {"continuous": {"kv_bytes_reserved": 1000}}}
+
+    def cur(speedup=1.34, frac=0.33, kv=1000):
+        return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
+                "modes": {"continuous": {"kv_bytes_reserved": kv}}}
+
+    assert compare(base, cur(), 0.15) == []
+    # >15% speedup drop but still >= 1.0: runner jitter, not a failure
+    assert compare(base, cur(speedup=1.10), 0.15) == []
+    # >15% drop AND below parity: continuous batching stopped paying
+    assert any("continuous_speedup" in f
+               for f in compare(base, cur(speedup=0.95), 0.15))
+    # deterministic KV bytes gate strictly, floor or not
+    assert any("kv_bytes_reserved" in f
+               for f in compare(base, cur(kv=1200), 0.15))
+    assert any("kv_reserved_frac" in f
+               for f in compare(base, cur(frac=0.40), 0.15))
+    # a metric the baseline proves existed must not vanish silently
+    gone = cur()
+    del gone["kv_reserved_frac"]
+    assert any("missing" in f for f in compare(base, gone, 0.15))
+    # ...but a metric absent from the *baseline* is just new: skipped
+    part = {"continuous_speedup": 1.3}
+    assert compare(part, cur(), 0.15) == []
+
+
+def _kernel_grep(tree: Path) -> int:
+    """The kernel-boundary gate the lint job runs, pointed at ``tree``."""
+    script = ('hits="$(grep -rn "pl\\.BlockSpec\\|pltpu" src/ '
+              '| grep -v "src/repro/kernels/" | grep -v compat.py || true)"; '
+              'if [ -n "$hits" ]; then exit 1; fi')
+    return subprocess.run(["bash", "-c", script], cwd=tree).returncode
+
+
+def test_kernel_boundary_grep_passes_clean_and_fails_on_leak(tmp_path):
+    """Pallas internals (pl.BlockSpec / pltpu) may only appear inside
+    src/repro/kernels/ and compat.py — everywhere else must go through
+    the dispatcher.  The paged KV work is exactly where this starts
+    drifting, so the lint job greps for it and this test keeps the grep
+    honest against a synthetic violation."""
+    wf_run = _all_run_lines(_load()["jobs"]["lint"])
+    assert 'grep -rn "pl\\.BlockSpec\\|pltpu" src/' in wf_run
+    assert 'grep -v "src/repro/kernels/"' in wf_run
+
+    assert _kernel_grep(ROOT) == 0, "the real tree must satisfy the invariant"
+
+    bad = tmp_path / "src" / "repro"
+    (bad / "serve").mkdir(parents=True)
+    (bad / "serve" / "oops.py").write_text(
+        "from jax.experimental.pallas import tpu as pltpu\n")
+    assert _kernel_grep(tmp_path) == 1
+
+    # ...kernels/ and compat.py stay allowed
+    (bad / "serve" / "oops.py").unlink()
+    (bad / "kernels").mkdir()
+    (bad / "kernels" / "fast.py").write_text(
+        "from jax.experimental.pallas import tpu as pltpu\n")
+    (bad / "compat.py").write_text(
+        "from jax.experimental.pallas import tpu as _pltpu\n")
+    assert _kernel_grep(tmp_path) == 0
