@@ -13,7 +13,13 @@ fails when a watched metric regresses by more than ``--max-regression``:
 * ``kv_bytes_reserved`` (paged ``continuous`` mode) — deterministic
   bytes, catches anyone quietly re-inflating the paged pool;
 * ``kv_reserved_frac`` — the paged/dense reservation ratio, the
-  headline memory win of the paged KV cache.
+  headline memory win of the paged KV cache;
+* ``itl_p99_ms`` (``continuous`` mode) — the inter-token latency tail
+  chunked prefill exists to flatten; a >15% growth means admissions are
+  stalling decode again;
+* ``chunked_itl_p99_ratio`` — chunked/unchunked p99 on the same trace;
+  a 1.0 noise floor absorbs jitter while chunking is at-or-better than
+  stall-the-world, growth past both floor and tolerance fails.
 
 A missing baseline (first run, new cache key, metric added since) passes
 with a note — the gate tightens as the trajectory accumulates, it never
@@ -39,12 +45,18 @@ from pathlib import Path
 #: shared runners: an "up" metric only fails while the current value is
 #: also below the floor (continuous_speedup swings ~1.1-1.4x run to run
 #: on CI hardware, but below 1.0 continuous batching has genuinely
-#: stopped paying for itself).  The KV byte metrics are deterministic —
-#: no floor, any >tolerance growth is a real change.
+#: stopped paying for itself); symmetrically a "down" metric with a
+#: floor only fails while the current value is also *above* it
+#: (chunked_itl_p99_ratio <= 1.0 means chunking still beats
+#: stall-the-world, whatever the run-to-run swing).  The KV byte
+#: metrics are deterministic — no floor, any >tolerance growth is a
+#: real change.
 WATCHED = (
     ("continuous_speedup", "up", 1.0),
     ("kv_bytes_reserved", "down", None),
     ("kv_reserved_frac", "down", None),
+    ("itl_p99_ms", "down", None),
+    ("chunked_itl_p99_ratio", "down", 1.0),
 )
 
 
@@ -84,6 +96,10 @@ def compare(baseline: dict, current: dict,
         if bad and floor is not None and direction == "up" and c >= floor:
             print(f"  {name}: {b:.4g} -> {c:.4g} ({ratio:.2%}) ok "
                   f"(above the {floor:g} noise floor)")
+            continue
+        if bad and floor is not None and direction == "down" and c <= floor:
+            print(f"  {name}: {b:.4g} -> {c:.4g} ({ratio:.2%}) ok "
+                  f"(below the {floor:g} noise floor)")
             continue
         verdict = "REGRESSION" if bad else "ok"
         print(f"  {name}: {b:.4g} -> {c:.4g} ({ratio:.2%}) {verdict}")

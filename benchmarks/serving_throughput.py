@@ -6,18 +6,26 @@ arrival trace with mixed prompt/output lengths.
         --out BENCH_serving.json
 
 All modes run the *same* trace through the same engine machinery
-(identical prefill/decode compiled fns — only the slot admission policy
-and cache layout differ), with all shapes warmed up before the clock
-starts.  ``continuous`` and ``static`` run the paged cache
-(``--kv-block-size``, pool auto-sized to the trace's worst-case request
-unless ``--kv-pool-blocks`` overrides); a third ``dense`` mode
-(continuous policy, per-slot ``max_len`` rows) is the memory baseline.
-Emits ``BENCH_serving.json`` — one point of the serving perf
+(identical compiled fns — only the slot admission policy, cache layout
+and prefill chunking differ), with all shapes warmed up before the
+clock starts.  ``continuous`` runs chunked prefill (prompts ride the
+mixed decode steps) on the paged cache (``--kv-block-size``, pool
+auto-sized to the trace's worst-case request unless
+``--kv-pool-blocks`` overrides); ``unchunked`` is the same engine with
+``prefill_chunk_tokens=0`` (stall-the-world prefill — the chunking A/B
+oracle); ``static`` is the lockstep admission baseline; a ``dense``
+mode (continuous policy, per-slot ``max_len`` rows) is the memory
+baseline.  Emits ``BENCH_serving.json`` — one point of the serving perf
 trajectory: ``continuous_speedup`` < 1.0 and ``kv_bytes_reserved``
 (paged mode) growing are the regression signals the CI bench gate
 compares run over run; ``kv_reserved_frac`` is the paged/dense memory
 ratio and ``paged_speedup`` the paged/dense throughput ratio (the paged
-cache must win memory without losing tok/s).
+cache must win memory without losing tok/s).  Each mode reports
+inter-token latency percentiles (``itl_p50_ms``/``itl_p95_ms``/
+``itl_p99_ms`` — wall time of each engine step that had a decoding slot
+at entry, so a stall-the-world prefill lands in the tail), and the
+top-level ``chunked_itl_p99_ratio`` (continuous / unchunked p99) is the
+headline chunking win the gate watches.
 """
 
 from __future__ import annotations
@@ -86,7 +94,7 @@ def run_mode(engine, trace: list[dict]) -> dict:
     out_tokens = sum(len(c.tokens) for c, _ in finished)
     lats = np.asarray([t - arrival[c.uid] for c, t in finished])
     s = engine.stats
-    return {
+    metrics = {
         "requests": len(finished),
         "wall_s": round(wall, 4),
         "output_tokens": int(out_tokens),
@@ -94,8 +102,11 @@ def run_mode(engine, trace: list[dict]) -> dict:
         "decode_steps": int(s["decode_steps"]),
         "decode_tok_per_s": round(
             s["decode_tokens"] / max(s["decode_s"], 1e-9), 2),
-        "prefill_tok_per_s": round(
-            s["prefill_tokens"] / max(s["prefill_s"], 1e-9), 2),
+        # chunked engines have no separate prefill phase (prefill_s == 0,
+        # the prompt tokens rode the mixed steps) — report 0, not inf
+        "prefill_tok_per_s": (0.0 if s["prefill_s"] <= 0 else round(
+            s["prefill_tokens"] / s["prefill_s"], 2)),
+        "prefill_chunk_tokens": int(engine.chunk if engine.chunked else 0),
         "compile_s": round(s["compile_s"], 3),
         "latency_mean_s": round(float(lats.mean()), 4),
         "latency_p95_s": round(float(np.quantile(lats, 0.95)), 4),
@@ -105,6 +116,14 @@ def run_mode(engine, trace: list[dict]) -> dict:
         "kv_block_size": int(engine.block_size),
         "peak_blocks_in_use": int(engine.peak_blocks_in_use),
     }
+    if engine.itl_samples:
+        # wall time of each step that had a decoding slot at entry: a
+        # stall-the-world prefill shows up as a fat p99, chunking's
+        # whole point is to flatten it
+        itl = np.asarray(engine.itl_samples) * 1e3
+        for q in (50, 95, 99):
+            metrics[f"itl_p{q}_ms"] = round(float(np.percentile(itl, q)), 3)
+    return metrics
 
 
 def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
@@ -126,6 +145,9 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
     arch = reduced_arch(configs.get(arch_name), width, depth, vocab, 4)
     max_len = max_len or (max(prompt_buckets) + gen_range[1])
     typical = min(max(prompt_buckets) + gen_range[1], max_len)
+    # the chunk budget the continuous mode will run (ServeEngine's auto
+    # default) — the plan prices decode as that mixed step
+    chunk = min(2 * kv_block_size if kv_block_size else 256, max_len)
     n_dev = jax.device_count()
     mesh, mesh_spec = serve_mesh(n_dev)
     plan = resolve_serve_plan(
@@ -133,7 +155,7 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         strategy=strategy, prompt_len=max(prompt_buckets),
         max_batch=max_batch, max_len=max_len,
         kv_block_size=kv_block_size, typical_tokens=typical,
-        save_plan=save_plan)
+        prefill_chunk_tokens=chunk, save_plan=save_plan)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
@@ -166,19 +188,24 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         },
         "modes": {},
     }
-    # (mode name, admission policy, block size, pool blocks): the paged
-    # continuous/static pair measures scheduling, the dense continuous
-    # baseline measures the paging memory/throughput delta
-    runs = [("continuous", "continuous", kv_block_size, kv_pool_blocks),
-            ("static", "static", kv_block_size, kv_pool_blocks)]
+    # (mode name, admission policy, block size, pool blocks, chunk): the
+    # paged continuous/static pair measures scheduling, the dense
+    # continuous baseline measures the paging memory/throughput delta,
+    # and unchunked (same engine, prefill_chunk_tokens=0 — stall-the-
+    # world prefill) is the chunking A/B oracle for the ITL win
+    runs = [("continuous", "continuous", kv_block_size, kv_pool_blocks,
+             chunk),
+            ("unchunked", "continuous", kv_block_size, kv_pool_blocks, 0),
+            ("static", "static", kv_block_size, kv_pool_blocks, 0)]
     if kv_block_size:
-        runs.append(("dense", "continuous", 0, 0))
+        runs.append(("dense", "continuous", 0, 0, chunk))
     with use_mesh(mesh if n_dev > 1 else None):
-        for mode, policy, bs, pool in runs:
+        for mode, policy, bs, pool, ck in runs:
             engine = ServeEngine(params, arch, max_batch=max_batch,
                                  max_len=max_len, plan=plan, q_chunk=256,
                                  policy=policy, kv_block_size=bs,
-                                 kv_pool_blocks=pool or None)
+                                 kv_pool_blocks=pool or None,
+                                 prefill_chunk_tokens=ck)
             engine.warmup(buckets)
             report["modes"][mode] = run_mode(engine, trace)
             m = report["modes"][mode]
@@ -186,12 +213,21 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   f"wall {m['wall_s']*1e3:8.1f} ms  "
                   f"{m['decode_steps']} decode steps  "
                   f"p95 latency {m['latency_p95_s']*1e3:.0f} ms  "
+                  f"itl p99 {m.get('itl_p99_ms', 0):.1f} ms  "
                   f"kv {m['kv_bytes_reserved']/2**20:.2f} MiB")
     modes = report["modes"]
     report["continuous_speedup"] = round(
         modes["continuous"]["out_tok_per_s"]
         / max(modes["static"]["out_tok_per_s"], 1e-9), 3)
     print(f"continuous/static throughput: {report['continuous_speedup']}x")
+    if ("itl_p99_ms" in modes["continuous"]
+            and "itl_p99_ms" in modes["unchunked"]):
+        # < 1.0 means chunked prefill flattened the decode latency tail
+        report["chunked_itl_p99_ratio"] = round(
+            modes["continuous"]["itl_p99_ms"]
+            / max(modes["unchunked"]["itl_p99_ms"], 1e-9), 3)
+        print(f"chunked/unchunked itl p99: "
+              f"{report['chunked_itl_p99_ratio']}x")
     if "dense" in modes:
         report["paged_speedup"] = round(
             modes["continuous"]["out_tok_per_s"]

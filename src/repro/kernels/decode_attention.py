@@ -128,7 +128,9 @@ def _block_cands(k, block_k):
 
 
 def _supports(q, k, v, kv_len, *, block_k=None):
-    if k.shape != v.shape or q.shape[1] != k.shape[1]:
+    # mixed-step 5-d q (per-slot variable query tokens) falls back to the
+    # ref/xla backends — this kernel is single-token-per-slot only
+    if q.ndim != 4 or k.shape != v.shape or q.shape[1] != k.shape[1]:
         return False
     return k.shape[2] % _block_cands(k, block_k)[0] == 0
 

@@ -132,3 +132,141 @@ def _supports(q, k, v, *, causal=True, block_q=None, block_k=None):
 
 dispatch.register("flash_attention", "xla", priority=50,
                   supports=_supports)(flash_attention_xla)
+
+
+# --------------------------------------------------------------------------- #
+# depth-proportional mixed-step decode attention
+#
+# The reference mixed kernel materializes (B, KH, G, T, L) scores against
+# the cache's full padded length L = max_len, so a prefill chunk riding
+# the mixed step costs O(T * max_len) no matter how shallow the slot
+# actually is — 10x+ the work of the stall-the-world prefill it replaces.
+# These impls stream KV blocks through a ``lax.while_loop`` whose trip
+# count is ceil(max(kv_len) / block) — a *dynamic* bound, so compute is
+# proportional to the deepest live slot, exactly like the batch-1 prefill
+# the chunk displaced.  Online-softmax carry per block, same masking
+# contract as the reference (fully masked rows produce finite garbage).
+# --------------------------------------------------------------------------- #
+def mixed_decode_attention_xla(q, k, v, kv_len, *, block_k=None):
+    """q: (B, KH, G, T, D); k/v: (B, KH, L, D); kv_len: (B, T) — query t
+    of row b attends to cache positions < kv_len[b, t]."""
+    B, KH, G, T, D = q.shape
+    L = k.shape[2]
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.shape != (B, T):
+        raise ValueError(
+            f"mixed decode kv_len must be ({B}, {T}) — one valid length "
+            f"per (row, query token); got shape {kv_len.shape}")
+    blk = min(int(block_k) if block_k else 128, L)
+    nb_max = -(-L // blk)
+    if L % blk:
+        pad = ((0, 0), (0, 0), (0, nb_max * blk - L), (0, 0))
+        k, v = jnp.pad(k, pad), jnp.pad(v, pad)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    nb = jnp.minimum((jnp.max(kv_len) + blk - 1) // blk, nb_max)
+
+    def body(carry):
+        i, m, l, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k, i * blk, blk, 2)
+        vb = jax.lax.dynamic_slice_in_dim(v, i * blk, blk, 2)
+        s = jnp.einsum("bkgtd,bkld->bkgtl", qf, kb.astype(jnp.float32))
+        pos = i * blk + jnp.arange(blk)
+        valid = pos[None, None, :] < kv_len[:, :, None]          # (B, T, blk)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        mn = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - mn[..., None])
+        alpha = jnp.exp(m - mn)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bkgtl,bkld->bkgtd", p, vb.astype(jnp.float32))
+        return i + 1, mn, l, acc
+
+    m0 = jnp.full((B, KH, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, T, D), jnp.float32)
+    _, _, l, acc = jax.lax.while_loop(
+        lambda c: c[0] < nb, body, (jnp.int32(0), m0, l0, a0))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def paged_mixed_attention_xla(q, k_pool, v_pool, block_tables, kv_len):
+    """q: (B, KH, G, T, D); k/v_pool: (NB, block_size, KH, D);
+    block_tables: (B, pages); kv_len: (B, T).  Streams each slot's
+    *logical* pages in order — no dense gather of the whole table — up to
+    the deepest live slot."""
+    B, KH, G, T, D = q.shape
+    bs = k_pool.shape[1]
+    pages = block_tables.shape[1]
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.shape != (B, T):
+        raise ValueError(
+            f"mixed decode kv_len must be ({B}, {T}) — one valid length "
+            f"per (row, query token); got shape {kv_len.shape}")
+    bt = block_tables.astype(jnp.int32)
+    qf = q.astype(jnp.float32) / math.sqrt(D)
+    nb = jnp.minimum((jnp.max(kv_len) + bs - 1) // bs, pages)
+
+    def body(carry):
+        i, m, l, acc = carry
+        ids = jax.lax.dynamic_slice_in_dim(bt, i, 1, 1)[:, 0]    # (B,)
+        kb = k_pool[ids].astype(jnp.float32)                # (B, bs, KH, D)
+        vb = v_pool[ids].astype(jnp.float32)
+        s = jnp.einsum("bkgtd,blkd->bkgtl", qf, kb)
+        pos = i * bs + jnp.arange(bs)
+        valid = pos[None, None, :] < kv_len[:, :, None]          # (B, T, bs)
+        s = jnp.where(valid[:, None, None], s, NEG_INF)
+        mn = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - mn[..., None])
+        alpha = jnp.exp(m - mn)
+        l = l * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bkgtl,blkd->bkgtd", p, vb)
+        return i + 1, mn, l, acc
+
+    m0 = jnp.full((B, KH, G, T), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KH, G, T), jnp.float32)
+    a0 = jnp.zeros((B, KH, G, T, D), jnp.float32)
+    _, _, l, acc = jax.lax.while_loop(
+        lambda c: c[0] < nb, body, (jnp.int32(0), m0, l0, a0))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+# "xla" covers the whole decode op (the 4-d single-token form aliases the
+# linear-memory reference, keeping --kernel-backend xla usable), but
+# auto-selection only prefers it for the 5-d mixed form — where the
+# dynamic-bound streaming above beats the reference's padded-L scores.
+def _mixed_only(q, *args, **kwargs):
+    return q.ndim == 5
+
+
+def _decode_xla(q, k, v, kv_len, *, block_k=None):
+    from .ref import _decode_ref
+    if q.ndim == 5:
+        return mixed_decode_attention_xla(q, k, v, kv_len, block_k=block_k)
+    return _decode_ref(q, k, v, kv_len, block_k=block_k)
+
+
+def _decode_supports(q, k, v, kv_len, *, block_k=None):
+    return q.shape[1] == k.shape[1] and k.shape == v.shape
+
+
+def _paged_xla(q, k_pool, v_pool, block_tables, kv_len):
+    from .ref import paged_decode_attention_ref
+    if q.ndim == 5:
+        return paged_mixed_attention_xla(q, k_pool, v_pool, block_tables,
+                                         kv_len)
+    return paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
+                                      kv_len)
+
+
+def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
+    return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
+            and block_tables.ndim == 2
+            and block_tables.shape[0] == q.shape[0])
+
+
+dispatch.register("decode_attention", "xla", priority=70,
+                  supports=_decode_supports,
+                  auto_gate=_mixed_only)(_decode_xla)
+dispatch.register("paged_decode_attention", "xla", priority=70,
+                  supports=_paged_supports,
+                  auto_gate=_mixed_only)(_paged_xla)

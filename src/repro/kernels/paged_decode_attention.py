@@ -126,7 +126,11 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
 # dispatch registration: "pallas" (native TPU) and "interpret" backends
 # --------------------------------------------------------------------------- #
 def _supports(q, k_pool, v_pool, block_tables, kv_len):
-    return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
+    # mixed-step 5-d q (per-slot variable query tokens) falls back to the
+    # ref/xla gather backends — this kernel is single-token-per-slot only
+    return (q.ndim == 4
+            and k_pool.shape == v_pool.shape
+            and q.shape[1] == k_pool.shape[2]
             and block_tables.ndim == 2
             and block_tables.shape[0] == q.shape[0])
 

@@ -69,6 +69,35 @@ def decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     return o.reshape(B, H, D).astype(q.dtype)
 
 
+def mixed_decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                               kv_len: jax.Array) -> jax.Array:
+    """Mixed-step decode: per-slot variable query tokens over the cache.
+
+    q: (B, H, T, D) — row b carries T padded query tokens (decoding slots
+    use 1, prefill chunks up to T); k/v: (B, KH, L, D) the cache;
+    kv_len: (B, T) int32 — query t of row b attends to cache positions
+    < kv_len[b, t] (causal at the slot's own depth: the caller sets
+    ``kv_len[b, t] = pos[b] + min(t + 1, q_len[b])``).  Rows/queries
+    beyond a slot's ``q_len`` may have ``kv_len == pos`` or 0 — their
+    output is finite garbage the engine never samples."""
+    B, H, T, D = q.shape
+    _, KH, Lk, _ = k.shape
+    G = H // KH
+    kv_len = jnp.asarray(kv_len, jnp.int32)
+    if kv_len.shape != (B, T):
+        raise ValueError(
+            f"mixed decode kv_len must be ({B}, {T}) — one valid length "
+            f"per (row, query token); got shape {kv_len.shape}")
+    qg = q.reshape(B, KH, G, T, D)
+    s = jnp.einsum("bkgtd,bkld->bkgtl", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    valid = jnp.arange(Lk)[None, None, :] < kv_len[:, :, None]   # (B, T, L)
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgtl,bkld->bkgtd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, T, D).astype(q.dtype)
+
+
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
                                kv_len) -> jax.Array:
@@ -83,14 +112,27 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     reuses :func:`decode_attention_ref`; unallocated table entries point
     at the engine's trash block and are masked by ``kv_len`` exactly like
     stale positions in the dense cache.
+
+    A 5-d q ``(B, KH, G, T, D)`` with kv_len ``(B, T)`` is the mixed-step
+    form (per-slot variable query tokens) and routes through
+    :func:`mixed_decode_attention_ref` over the same gathered view.
     """
-    B, KH, G, D = q.shape
+    mixed = q.ndim == 5
+    if mixed:
+        B, KH, G, T, D = q.shape
+    else:
+        B, KH, G, D = q.shape
     bs = k_pool.shape[1]
     pages = block_tables.shape[1]
     bt = block_tables.astype(jnp.int32)
     # (B, pages, bs, KH, D) -> (B, KH, pages*bs, D)
     gather = lambda pool: pool[bt].transpose(0, 3, 1, 2, 4).reshape(
         B, KH, pages * bs, D)
+    if mixed:
+        out = mixed_decode_attention_ref(q.reshape(B, KH * G, T, D),
+                                         gather(k_pool), gather(v_pool),
+                                         kv_len)
+        return out.reshape(B, KH, G, T, D)
     out = decode_attention_ref(q.reshape(B, KH * G, D), gather(k_pool),
                                gather(v_pool), kv_len)
     return out.reshape(B, KH, G, D)
@@ -183,6 +225,11 @@ def _decode_supports(q, k, v, kv_len, *, block_k=None):
 
 
 def _decode_ref(q, k, v, kv_len, *, block_k=None):
+    if q.ndim == 5:                           # mixed step: (B, KH, G, T, D)
+        B, KH, G, T, D = q.shape
+        out = mixed_decode_attention_ref(q.reshape(B, KH * G, T, D), k, v,
+                                         kv_len)
+        return out.reshape(B, KH, G, T, D)
     B, KH, G, D = q.shape
     out = decode_attention_ref(q.reshape(B, KH * G, D), k, v, kv_len)
     return out.reshape(B, KH, G, D)
@@ -194,10 +241,11 @@ def _wkv6_ref(r, k, v, w, u, *, chunk=64, initial_state=None,
                      initial_state=initial_state, return_state=return_state)
 
 
-# For decode_attention and wkv6 the reference IS the production XLA
-# lowering (linear-memory softmax / chunk-checkpointed scan), so the same
-# fn registers under both names — keeping the "xla" override usable on
-# every op (flash_attention's distinct chunked impl lives in mha_xla.py).
+# For wkv6 the reference IS the production XLA lowering
+# (chunk-checkpointed scan), so the same fn registers under both names.
+# decode_attention / paged_decode_attention get their "xla" backend from
+# mha_xla.py: the 4-d single-token form aliases these references, the
+# 5-d mixed form streams KV blocks with a dynamic depth bound there.
 def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
     return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
             and block_tables.ndim == 2
@@ -206,11 +254,7 @@ def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
 
 dispatch.register("decode_attention", "ref", priority=60,
                   supports=_decode_supports)(_decode_ref)
-dispatch.register("decode_attention", "xla", priority=50,
-                  supports=_decode_supports)(_decode_ref)
 dispatch.register("paged_decode_attention", "ref", priority=60,
-                  supports=_paged_supports)(paged_decode_attention_ref)
-dispatch.register("paged_decode_attention", "xla", priority=50,
                   supports=_paged_supports)(paged_decode_attention_ref)
 dispatch.register("wkv6", "ref", priority=60)(_wkv6_ref)
 dispatch.register("wkv6", "xla", priority=50)(_wkv6_ref)

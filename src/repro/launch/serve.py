@@ -6,7 +6,10 @@ requests admitted into free slots mid-decode, ragged single-token decode
 with per-slot positions, slots retired on EOS / max-tokens.  KV is paged
 (``--kv-block-size`` tokens per block, block-table indirection, lazy
 allocation; ``--kv-pool-blocks`` bounds the pool) — ``--kv-block-size
-0`` keeps the dense per-slot ``max_len`` rows.  ``--no-continuous``
+0`` keeps the dense per-slot ``max_len`` rows.  Prompts prefill in
+chunks *inside* the decode batch (mixed steps; ``--prefill-chunk-tokens``
+sets the per-step budget, 0 restores stall-the-world prefill) so
+in-flight decodes never stall behind an admission.  ``--no-continuous``
 keeps the lockstep static-batch oracle (admit a full batch, drain it,
 admit the next) for A/B comparison.
 
@@ -68,6 +71,7 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
                        max_batch: int, max_len: int,
                        kv_block_size: int = 0,
                        typical_tokens: int | None = None,
+                       prefill_chunk_tokens: int = 0,
                        save_plan: str = "") -> ParallelPlan:
     """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
     serving process executes are prefill + decode (shared by this
@@ -79,16 +83,27 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
     ``prompt_len``-based ``max_len``) rounded up to whole blocks —
     instead of the dense ``max_len`` reservation, so the searched decode
     plan sees the cache traffic the engine actually moves.
+
+    With chunked prefill (``prefill_chunk_tokens > 0``) the decode phase
+    is priced as the engine's *mixed* step: each step carries
+    ``max_batch - 1`` single-token decode slots plus one
+    ``prefill_chunk_tokens``-wide prefill chunk, so the amortized
+    per-slot query width is ``ceil((max_batch - 1 + chunk) / max_batch)``
+    and the searched decode plan sees the matmul work the mixed step
+    actually does.
     """
     kv_tokens = None
     if kv_block_size:
         tokens = min(typical_tokens or max_len, max_len)
         kv_tokens = -(-tokens // kv_block_size) * kv_block_size
+    q_tokens = None
+    if prefill_chunk_tokens > 0:
+        q_tokens = -(-(max_batch - 1 + prefill_chunk_tokens) // max_batch)
     return resolve_plan(
         arch, mesh_spec, phases=("prefill", "decode"),
         plan_path=plan_path, strategy=strategy, save_plan=save_plan,
         prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
-        decode_kv_tokens=kv_tokens)
+        decode_kv_tokens=kv_tokens, decode_q_tokens=q_tokens)
 
 
 def _serve_encdec(args, arch, plan) -> None:
@@ -169,6 +184,12 @@ def main() -> None:
                          "dense-equivalent capacity); smaller pools "
                          "serve the same slots in less memory, gated by "
                          "block-budget admission")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=-1,
+                    help="per-step prompt-token budget for chunked "
+                         "prefill riding the mixed decode step (-1 = "
+                         "engine default: 2*block_size paged, 256 dense; "
+                         "0 = stall-the-world prefill, the pre-chunking "
+                         "behavior)")
     ap.add_argument("--strategy", default="uniform",
                     choices=list(STRATEGIES),
                     help="parallelization plan: uniform/data/model/owt "
@@ -207,11 +228,18 @@ def main() -> None:
     n_dev = jax.device_count()
     mesh, mesh_spec = serve_mesh(n_dev)
     max_len = args.prompt_len + args.gen
+    # the plan prices decode with the chunk budget the engine will run;
+    # mirror ServeEngine's auto default (2*block_size paged, 256 dense)
+    chunk = args.prefill_chunk_tokens
+    if chunk < 0:
+        chunk = 2 * args.kv_block_size if args.kv_block_size else 256
+    chunk = min(chunk, max_len)
     plan = resolve_serve_plan(
         arch, mesh_spec if n_dev > 1 else None, plan_path=args.plan,
         strategy=args.strategy, prompt_len=args.prompt_len,
         max_batch=args.batch, max_len=max_len,
-        kv_block_size=args.kv_block_size, save_plan=args.save_plan)
+        kv_block_size=args.kv_block_size, prefill_chunk_tokens=chunk,
+        save_plan=args.save_plan)
     if arch.enc_layers:
         with use_mesh(mesh if n_dev > 1 else None):
             _serve_encdec(args, arch, plan)
@@ -235,7 +263,8 @@ def main() -> None:
             params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
             q_chunk=256, kernel_backend=args.kernel_backend or None,
             policy=mode, kv_block_size=args.kv_block_size,
-            kv_pool_blocks=args.kv_pool_blocks or None)
+            kv_pool_blocks=args.kv_pool_blocks or None,
+            prefill_chunk_tokens=chunk)
         # warm up on the *actual* request prompt lengths — for frontend
         # (VLM) archs the dataset emits prompts shorter than
         # --prompt-len, and a mis-bucketed warmup would push the real
@@ -256,11 +285,25 @@ def main() -> None:
           f"plan={plan.strategy_name} devices={n_dev} kv={kv_desc}")
     print(f"kv reserved: {engine.kv_bytes_reserved/2**20:.2f} MiB")
     print(f"compile: {t_compile:.2f} s (excluded from the rates below)")
-    print(f"prefill: {s['prefill_s']*1e3:.1f} ms "
-          f"({s['prefill_tokens']/max(s['prefill_s'],1e-9):.0f} tok/s)")
-    print(f"decode:  {s['decode_s']*1e3:.1f} ms over "
-          f"{int(s['decode_steps'])} ragged steps "
-          f"({s['decode_tokens']/max(s['decode_s'],1e-9):.0f} tok/s)")
+    if engine.chunked:
+        # prompt tokens ride the mixed steps: no separate prefill phase,
+        # so all wall time (and the prompt work) is under decode_s
+        print(f"prefill: chunked — {int(s['prefill_tokens'])} prompt "
+              f"tokens rode the mixed steps (chunk={engine.chunk})")
+        print(f"mixed:   {s['decode_s']*1e3:.1f} ms over "
+              f"{int(s['decode_steps'])} steps "
+              f"({(s['decode_tokens']+s['prefill_tokens'])/max(s['decode_s'],1e-9):.0f} tok/s incl. prompt)")
+    else:
+        print(f"prefill: {s['prefill_s']*1e3:.1f} ms "
+              f"({s['prefill_tokens']/max(s['prefill_s'],1e-9):.0f} tok/s)")
+        print(f"decode:  {s['decode_s']*1e3:.1f} ms over "
+              f"{int(s['decode_steps'])} ragged steps "
+              f"({s['decode_tokens']/max(s['decode_s'],1e-9):.0f} tok/s)")
+    if engine.itl_samples:
+        itl = np.percentile(np.asarray(engine.itl_samples) * 1e3,
+                            [50, 95, 99])
+        print(f"inter-token latency: p50={itl[0]:.1f} ms "
+              f"p95={itl[1]:.1f} ms p99={itl[2]:.1f} ms")
     print(f"end-to-end: {out_tokens} output tokens in {wall*1e3:.1f} ms "
           f"({out_tokens/max(wall,1e-9):.0f} tok/s)")
     print("sample generations (token ids):")

@@ -28,6 +28,11 @@ class ShapeSpec:
     seq_len: int
     global_batch: int
     kind: str                  # "train" | "prefill" | "decode"
+    # decode only: query tokens each slot advances per step.  1 is the
+    # classic single-token decode; >1 prices the *mixed* step (chunked
+    # prefill riding the decode batch), where the average slot carries
+    # its share of the per-step prefill budget.
+    q_tokens: int = 1
 
     @property
     def tokens(self) -> int:

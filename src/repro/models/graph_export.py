@@ -65,20 +65,27 @@ def export_graph(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
 
 
 def phase_shape(phase: str, *, seq_len: int, batch: int,
-                kv_tokens: int | None = None) -> ShapeSpec:
+                kv_tokens: int | None = None,
+                q_tokens: int | None = None) -> ShapeSpec:
     """The ShapeSpec a serving/training *phase* prices its graph with.
 
     ``train``:   the dense global batch (fwd+bwd, gradient sync);
     ``prefill``: one admitted request — batch 1 at its prompt length;
-    ``decode``:  a single-token ragged batch over ``batch`` cache slots
-                 against a ``seq_len``-deep cache (the exporter emits
-                 Sq=1 and flags attention as cache-read-dominated).
+    ``decode``:  a ragged batch over ``batch`` cache slots against a
+                 ``seq_len``-deep cache (the exporter emits Sq=q_tokens
+                 and flags attention as cache-read-dominated).
 
     ``kv_tokens`` (decode only) prices the cache read at the *allocated*
     per-slot depth instead of the ``max_len`` reservation — under the
     paged KV cache a slot's live blocks cover its actual request, so the
     dominant ``kv_bytes`` term (and the searched decode plan with it)
     must not be inflated to the padded worst case.
+
+    ``q_tokens`` (decode only, default 1) prices the *mixed* step: with
+    chunked prefill riding the decode batch, the average slot advances
+    ``q_tokens`` query tokens per step instead of 1 — the matmul/FFN
+    terms scale with it while the cache-read term does not, which is
+    exactly the trade the searched decode plan must see.
     """
     if phase == "train":
         return ShapeSpec(f"train_{seq_len}", seq_len, batch, "train")
@@ -86,7 +93,9 @@ def phase_shape(phase: str, *, seq_len: int, batch: int,
         return ShapeSpec(f"prefill_{seq_len}", seq_len, 1, "prefill")
     if phase == "decode":
         depth = min(seq_len, kv_tokens) if kv_tokens else seq_len
-        return ShapeSpec(f"decode_{depth}", depth, batch, "decode")
+        qt = max(1, int(q_tokens or 1))
+        name = f"decode_{depth}" + (f"+q{qt}" if qt > 1 else "")
+        return ShapeSpec(name, depth, batch, "decode", q_tokens=qt)
     raise ValueError(
         f"unknown phase {phase!r}; expected train | prefill | decode")
 
@@ -230,7 +239,7 @@ def _head(b: _Builder, arch: ArchConfig, B: int, Sq: int):
 def _export_decoder(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     B = shape.global_batch
     decode = shape.kind == "decode"
-    Sq = 1 if decode else shape.seq_len
+    Sq = shape.q_tokens if decode else shape.seq_len
     Skv = shape.seq_len
     D, V = arch.d_model, arch.vocab
     T = B * Sq
@@ -270,7 +279,7 @@ def _export_encdec(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     # split the budgeted sequence between encoder and decoder
     Se = min(4096, max(16, shape.seq_len // 2)) if decode else shape.seq_len // 2
     Sd_total = shape.seq_len if decode else shape.seq_len // 2
-    Sq = 1 if decode else Sd_total
+    Sq = shape.q_tokens if decode else Sd_total
     D, V = arch.d_model, arch.vocab
     enc_arch = _enc_view(arch)
 

@@ -108,7 +108,7 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
               kv_cache: dict | None = None, cache_pos=None,
               block_tables: jax.Array | None = None,
               kv_override: tuple | None = None, q_chunk: int = 1024,
-              use_rope: bool = True):
+              use_rope: bool = True, q_lens: jax.Array | None = None):
     """GQA attention block (qkv proj + core).  ``cfg`` shards the
     (batch, seq, heads) output of the core (the searched config).
 
@@ -121,7 +121,14 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     block_tables: (B, pages) int32 — the cache is *paged*: kv_cache
     leaves are a global block pool (num_blocks, block_size, KH, D) and
     row b's logical page p lives in physical block ``block_tables[b, p]``
-    (single-token decode only; requires per-slot ``cache_pos``).
+    (requires per-slot ``cache_pos``).
+    q_lens: (B,) int32 — *mixed step*: row b's first ``q_lens[b]`` of the
+    S query tokens are live (decode slots carry 1, prefill chunks up to
+    S); the rest are padding whose K/V writes are dropped and whose
+    outputs the caller must never sample.  Requires per-slot ``cache_pos``
+    when S > 1; ignored at S == 1 (every live row is a plain
+    single-token decode there, and padding rows' writes are overwritten
+    before their position is ever attended).
     kv_override: (k, v, kv_positions) for cross-attention.
     Returns (attn_out_(B,S,H,D), new_cache).
     """
@@ -147,6 +154,62 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         q = rms_norm(q, p["q_norm"])
     if use_rope:
         q = rope(q, positions, arch.rope_theta)
+
+    if kv_cache is not None and q_lens is not None and S > 1:
+        # Mixed step: per-slot variable query tokens.  Row b's token t is
+        # live iff t < q_lens[b], sits at absolute position
+        # cache_pos[b] + t, and attends causally at its own depth:
+        # kv_len[b, t] = cache_pos[b] + min(t + 1, q_lens[b]).  Padding
+        # tokens' K/V writes are dropped (dense: routed out of bounds;
+        # paged: parked in the trash block) and their outputs are finite
+        # garbage the engine never samples.
+        if getattr(cache_pos, "ndim", 0) != 1:
+            raise ValueError(
+                "mixed-step attention requires per-slot (B,) cache_pos; "
+                f"got {getattr(cache_pos, 'shape', cache_pos)}")
+        q_lens = jnp.asarray(q_lens, jnp.int32)
+        ck, cv = kv_cache["k"], kv_cache["v"]
+        t_ar = jnp.arange(S)
+        valid = t_ar[None, :] < q_lens[:, None]               # (B, S)
+        idx = cache_pos[:, None] + t_ar[None, :]              # (B, S)
+        kv_len = cache_pos[:, None] + jnp.minimum(t_ar + 1, q_lens[:, None])
+        kd, vd = k.astype(ck.dtype), v.astype(cv.dtype)
+        if block_tables is not None:
+            NB, bs = ck.shape[0], ck.shape[1]
+            pages = block_tables.shape[1]
+            # clamp for the table gather only; invalid writes then
+            # reroute to physical block 0 (the trash block) — clamping
+            # the physical index alone could scatter into a live block
+            idxc = jnp.minimum(idx, pages * bs - 1)
+            blk = jnp.take_along_axis(block_tables, idxc // bs, axis=1)
+            phys = jnp.where(valid, blk * bs + idxc % bs, 0)  # (B, S)
+            ck = ck.reshape(NB * bs, KH, hd).at[phys].set(kd).reshape(
+                ck.shape)
+            cv = cv.reshape(NB * bs, KH, hd).at[phys].set(vd).reshape(
+                cv.shape)
+            ck = constrain(ck, cfg, (None, None, "heads", None))
+            cv = constrain(cv, cfg, (None, None, "heads", None))
+        else:
+            L = ck.shape[1]
+            rows = jnp.arange(B)[:, None]
+            safe = jnp.where(valid, idx, L)      # out of bounds -> dropped
+            ck = ck.at[rows, safe].set(kd, mode="drop")
+            cv = cv.at[rows, safe].set(vd, mode="drop")
+            ck = constrain(ck, cfg, ("batch", "seq", "heads", None))
+            cv = constrain(cv, cfg, ("batch", "seq", "heads", None))
+        q = constrain(q, cfg, ("batch", "seq", "heads", None))
+        H = q.shape[2]
+        qg = q.transpose(0, 2, 1, 3).reshape(B, KH, H // KH, S, hd)
+        if block_tables is not None:
+            o = kernel_dispatch.call("paged_decode_attention", qg, ck, cv,
+                                     block_tables, kv_len)
+        else:
+            o = kernel_dispatch.call("decode_attention", qg,
+                                     ck.transpose(0, 2, 1, 3),
+                                     cv.transpose(0, 2, 1, 3), kv_len)
+        o = o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        o = constrain(o, cfg, ("batch", "seq", "heads", None))
+        return o, {"k": ck, "v": cv}
 
     if kv_cache is not None and block_tables is not None:
         # Paged decode: scatter the new token's K/V into its physical

@@ -17,6 +17,8 @@ Entry points:
   prefill(params, batch, cache, arch, plan)      -> (logits_last, cache)
   decode_step(params, token, cache, pos, arch, plan[, block_tables])
                                                  -> (logits, cache)
+  step(params, tokens, cache, pos, arch, plan[, q_lens, block_tables])
+                                                 -> (logits, cache)
 """
 
 from __future__ import annotations
@@ -93,9 +95,13 @@ def init_lm(key, arch: ArchConfig, dtype=jnp.float32) -> dict:
 # --------------------------------------------------------------------------- #
 def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
                  *, positions, causal=True, cache=None, cache_pos=None,
-                 block_tables=None, memory=None, memory_positions=None,
-                 q_chunk=512, time_chunk=64):
-    """Returns (h, aux_loss, new_cache)."""
+                 block_tables=None, q_lens=None, memory=None,
+                 memory_positions=None, q_chunk=512, time_chunk=64):
+    """Returns (h, aux_loss, new_cache).
+
+    q_lens: (B,) int32 — mixed serving step: only row b's first
+    ``q_lens[b]`` of the S tokens are live; attention drops padding K/V
+    writes and the recurrent mixers make padding state-transparent."""
     aux = 0.0
     new_cache: dict = {}
     for j, spec in enumerate(arch.pattern):
@@ -111,7 +117,7 @@ def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
                 lp["attn"], hn, arch, sub["attn"], positions=positions,
                 causal=causal, kv_cache=(lc or {}).get("kv"),
                 cache_pos=cache_pos, block_tables=block_tables,
-                q_chunk=q_chunk)
+                q_lens=q_lens, q_chunk=q_chunk)
             y = L.attention_out(lp["attn"], a, sub["attn_out"])
             if kvc is not None:
                 nc["kv"] = kvc
@@ -127,7 +133,7 @@ def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
             else:
                 y, st = Rc.mamba_mix(lp["ssm"], hn, arch, sub["ssm"],
                                      state=lc.get("ssm_state"),
-                                     chunk=time_chunk)
+                                     chunk=time_chunk, q_lens=q_lens)
                 nc["ssm_state"] = st
         elif spec.mixer == "rwkv":
             if cache is None:
@@ -139,7 +145,7 @@ def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
             else:
                 y, st = Rc.rwkv_tmix(lp["tmix"], hn, arch, sub["tmix"],
                                      state=lc.get("tmix_state"),
-                                     chunk=time_chunk)
+                                     chunk=time_chunk, q_lens=q_lens)
                 nc["tmix_state"] = st
         else:
             raise ValueError(spec.mixer)
@@ -163,7 +169,8 @@ def unit_forward(h, unit_params, arch: ArchConfig, unit_plan: UnitPlan,
         hn = constrain(hn, sub["ln2"], ("batch", "seq", "d_model"))
         if spec.mixer == "rwkv":
             y, st = Rc.rwkv_cmix(lp["cmix"], hn, arch, sub["cmix"],
-                                 state=(lc or {}).get("cmix_state"))
+                                 state=(lc or {}).get("cmix_state"),
+                                 q_lens=q_lens)
             if cache is not None:
                 nc["cmix_state"] = st
         elif spec.ffn == "moe":
@@ -194,8 +201,8 @@ REMAT_POLICIES = {
 
 def run_stack(h, stack_params, arch: ArchConfig, segments, *, positions,
               causal=True, cache=None, cache_pos=None, block_tables=None,
-              memory=None, q_chunk=512, time_chunk=64, remat=True,
-              remat_policy="nothing"):
+              q_lens=None, memory=None, q_chunk=512, time_chunk=64,
+              remat=True, remat_policy="nothing"):
     """Scan the unit stack segment by segment; returns (h, aux, new_cache)."""
     aux_total = jnp.zeros((), jnp.float32)
     new_cache_parts = []
@@ -225,7 +232,7 @@ def run_stack(h, stack_params, arch: ArchConfig, segments, *, positions,
                 h, aux_u, nc = unit_forward(
                     h, unit_params, arch, _plan, positions=positions,
                     causal=causal, cache=unit_cache, cache_pos=cache_pos,
-                    block_tables=block_tables, memory=memory,
+                    block_tables=block_tables, q_lens=q_lens, memory=memory,
                     q_chunk=q_chunk, time_chunk=time_chunk)
                 return (h, aux + aux_u), nc
 
@@ -465,6 +472,57 @@ def decode_step(params, token: jax.Array, cache: dict, pos,
                             positions=positions, causal=True, cache=cache,
                             cache_pos=cache_pos, block_tables=block_tables,
                             remat=False)
+    h = L.apply_norm(params["final_norm"], h)
+    h = constrain(h, plan.final_norm, ("batch", "seq", "d_model"))
+    logits = L.lm_head(params["lm_head"], h, params["embed"], arch,
+                       plan.lm_head)
+    return logits, cache
+
+
+def step(params, tokens: jax.Array, cache: dict, pos, arch: ArchConfig,
+         plan: ModelPlan | None = None, *, q_lens: jax.Array | None = None,
+         block_tables: jax.Array | None = None, q_chunk=512, time_chunk=64):
+    """One unified mixed step: every slot advances a variable number of
+    tokens in a single ragged batch (Sarathi-style chunked prefill riding
+    the decode batch).
+
+    tokens: (B, T) int32 — row b's live tokens occupy columns
+    ``[0, q_lens[b])``, the rest is padding; pos: scalar (broadcast) or
+    (B,) int32, row b's current cache depth; q_lens: (B,) int32 or None
+    (None means every row advances all T tokens — at T == 1 this is
+    exactly :func:`decode_step`).  Decoding slots contribute 1 token,
+    admitting slots a prefill chunk of up to T, idle slots 0.  With
+    ``block_tables`` the KV leaves are the paged pool from
+    :func:`init_paged_cache`.
+
+    Returns (logits (B, T, V), cache).  Row b's next-token logits sit at
+    ``logits[b, q_lens[b] - 1]``; rows with ``q_lens[b] == 0`` and padding
+    columns hold finite garbage the caller must not sample.
+    """
+    plan = plan if plan is not None else uniform_plan(arch)
+    B, T = tokens.shape
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        pos = jnp.broadcast_to(pos, (B,))
+    elif pos.shape != (B,):
+        raise ValueError(
+            f"step pos must be a scalar or a ({B},) vector matching the "
+            f"token batch; got shape {pos.shape}")
+    if q_lens is not None:
+        q_lens = jnp.asarray(q_lens, jnp.int32)
+        if q_lens.shape != (B,):
+            raise ValueError(
+                f"step q_lens must be a ({B},) vector matching the token "
+                f"batch; got shape {q_lens.shape}")
+    elif T > 1:
+        q_lens = jnp.full((B,), T, jnp.int32)
+    h = L.embed(params["embed"], tokens, plan.embed)
+    positions = pos[:, None] + jnp.arange(T)[None, :]
+    h, _, cache = run_stack(h, params["stack"], arch, plan.segments,
+                            positions=positions, causal=True, cache=cache,
+                            cache_pos=pos, block_tables=block_tables,
+                            q_lens=q_lens, q_chunk=q_chunk,
+                            time_chunk=time_chunk, remat=False)
     h = L.apply_norm(params["final_norm"], h)
     h = constrain(h, plan.final_norm, ("batch", "seq", "d_model"))
     logits = L.lm_head(params["lm_head"], h, params["embed"], arch,

@@ -38,6 +38,21 @@ def token_shift(x: jax.Array, prev: jax.Array | None) -> jax.Array:
     return jnp.concatenate([prev, x[:, :-1]], axis=1)
 
 
+def _shift_state(x: jax.Array, prev: jax.Array | None,
+                 q_lens: jax.Array | None) -> jax.Array:
+    """Next shift state: the last *live* token per row.  Without q_lens
+    that's x[:, -1]; with a mixed step it's x[:, q_lens[b] - 1] — and the
+    carried-over prev when q_lens[b] == 0 (the row sat this step out)."""
+    if q_lens is None:
+        return x[:, -1, :]
+    B, _, D = x.shape
+    pv = (prev[:, None, :].astype(x.dtype) if prev is not None
+          else jnp.zeros_like(x[:, :1]))
+    xe = jnp.concatenate([pv, x], axis=1)                 # (B, S+1, D)
+    gi = jnp.broadcast_to(q_lens[:, None, None].astype(jnp.int32), (B, 1, D))
+    return jnp.take_along_axis(xe, gi, axis=1)[:, 0]
+
+
 # --------------------------------------------------------------------------- #
 # RWKV6 time mix (WKV6 recurrence, data-dependent decay)
 # --------------------------------------------------------------------------- #
@@ -61,7 +76,8 @@ def init_rwkv_tmix(key, arch, dtype):
 
 
 def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
-              state: dict | None = None, chunk: int = 64):
+              state: dict | None = None, chunk: int = 64,
+              q_lens: jax.Array | None = None):
     """x: (B,S,D) -> (y, new_state).  state: {"shift": (B,D), "wkv": (B,H,hs,hs)}.
 
     The WKV6 recurrence goes through the kernel dispatcher (native Pallas
@@ -70,6 +86,11 @@ def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     ``state`` the returned ``new_state["wkv"]`` is None — training
     discards it, and computing the final state would force the scan
     backend even where the fused kernel is eligible.
+
+    q_lens: (B,) int32 — mixed step: only row b's first ``q_lens[b]``
+    tokens are live.  Padding tokens are made state-transparent at the
+    input level (w -> 1, k -> 0, so S <- 1·S + 0) and the shift state is
+    gathered at each row's own last live token.
     """
     B, S, D = x.shape
     H, hs = arch.n_rwkv_heads, arch.rwkv_head_size
@@ -84,6 +105,12 @@ def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     g = jax.nn.silu(xg @ p["wg"])
     w_log = p["w0"] + jnp.tanh(xw @ p["w_lora_a"]) @ p["w_lora_b"]
     w = jnp.exp(-jnp.exp(w_log.astype(jnp.float32))).reshape(B, S, H, hs)
+
+    if q_lens is not None:
+        valid = (jnp.arange(S)[None, :]
+                 < q_lens[:, None])[..., None, None]     # (B, S, 1, 1)
+        w = jnp.where(valid, w, 1.0)
+        k = jnp.where(valid, k, jnp.zeros((), k.dtype))
 
     r = constrain(r, cfg, ("batch", "seq", "heads", None))
     k = constrain(k, cfg, ("batch", "seq", "heads", None))
@@ -112,7 +139,7 @@ def rwkv_tmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
 
     y = (o * g) @ p["wo"]
     y = constrain(y, cfg, ("batch", "seq", "d_model"))
-    new_state = {"shift": x[:, -1, :], "wkv": Sn}
+    new_state = {"shift": _shift_state(x, prev, q_lens), "wkv": Sn}
     return y, new_state
 
 
@@ -128,7 +155,7 @@ def init_rwkv_cmix(key, arch, dtype):
 
 
 def rwkv_cmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
-              state: dict | None = None):
+              state: dict | None = None, q_lens: jax.Array | None = None):
     prev = state["shift"] if state is not None else None
     sh = token_shift(x, prev)
     mu = p["mu"]
@@ -139,7 +166,7 @@ def rwkv_cmix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     v = k @ p["wv"]
     y = jax.nn.sigmoid(xr @ p["wr"]) * v
     y = constrain(y, cfg, ("batch", "seq", "d_model"))
-    return y, {"shift": x[:, -1, :]}
+    return y, {"shift": _shift_state(x, prev, q_lens)}
 
 
 # --------------------------------------------------------------------------- #
@@ -165,7 +192,10 @@ def init_mamba(key, arch, dtype):
 
 
 def _causal_conv1d(x, w, b, state=None):
-    """x: (B,S,di); w: (k,di) depthwise; state: (B,k-1,di) carried."""
+    """x: (B,S,di); w: (k,di) depthwise; state: (B,k-1,di) carried.
+    Returns (out, xp) with xp the state-prepended input (B, k-1+S, di);
+    the caller slices its own next conv state out of xp (the last k-1
+    positions, or per-row windows on the mixed-step path)."""
     k = w.shape[0]
     if state is None:
         pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
@@ -173,11 +203,12 @@ def _causal_conv1d(x, w, b, state=None):
         pad = state.astype(x.dtype)
     xp = jnp.concatenate([pad, x], axis=1)
     out = sum(xp[:, i:i + x.shape[1], :] * w[i] for i in range(k)) + b
-    return out, xp[:, -(k - 1):, :]
+    return out, xp
 
 
 def mamba_mix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
-              state: dict | None = None, chunk: int = 64):
+              state: dict | None = None, chunk: int = 64,
+              q_lens: jax.Array | None = None):
     """x: (B,S,D) -> (y, new_state).
     state: {"conv": (B,k-1,di), "ssm": (B,di,N)}.
 
@@ -187,21 +218,39 @@ def mamba_mix(p: dict, x: jax.Array, arch, cfg: LayerConfig,
     carried state is needed).  When called without ``state`` the returned
     ``new_state["ssm"]`` is None — training discards it, and computing the
     final state would force the scan backends even where the fused kernel
-    is eligible."""
+    is eligible.
+
+    q_lens: (B,) int32 — mixed step: only row b's first ``q_lens[b]``
+    tokens are live.  Padding tokens get dt -> 0 (exp(0·A) = 1 decay,
+    zero input: the SSM state passes through untouched) and the conv
+    state window is gathered at each row's own last live token."""
     B, S, D = x.shape
     di, N = arch.d_inner, arch.ssm_state
     rank = p["dt_proj"].shape[0]
+    kw = p["conv_w"].shape[0]
 
     xz = x @ p["in_proj"]
     x1, z = jnp.split(xz, 2, axis=-1)
     x1 = constrain(x1, cfg, ("batch", "seq", "d_model"))
     conv_state = state["conv"] if state is not None else None
-    x1, new_conv = _causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state)
+    x1, xp = _causal_conv1d(x1, p["conv_w"], p["conv_b"], conv_state)
+    if q_lens is None:
+        new_conv = xp[:, -(kw - 1):, :]
+    else:
+        # row b's next conv window is xp[q_lens[b] : q_lens[b] + kw - 1]
+        # (q_lens[b] == 0 reproduces the carried-in state exactly)
+        gi = (q_lens[:, None].astype(jnp.int32)
+              + jnp.arange(kw - 1)[None, :])[..., None]   # (B, kw-1, 1)
+        new_conv = jnp.take_along_axis(
+            xp, jnp.broadcast_to(gi, (B, kw - 1, di)), axis=1)
     x1 = jax.nn.silu(x1)
 
     dbl = x1 @ p["x_proj"]
     dt, Bm, Cm = jnp.split(dbl, [rank, rank + N], axis=-1)
     dt = jax.nn.softplus(dt @ p["dt_proj"] + p["dt_bias"])
+    if q_lens is not None:
+        valid = jnp.arange(S)[None, :] < q_lens[:, None]
+        dt = dt * valid[..., None].astype(dt.dtype)
     A = -jnp.exp(p["A_log"])                                  # (di, N)
 
     # scan inputs stream in the activation dtype (bf16 on TPU); the state

@@ -33,19 +33,21 @@ STRATEGIES = ("uniform", "data", "model", "owt", "searched")
 def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
                       seq_len: int, batch: int,
                       kv_tokens: int | None = None,
+                      q_tokens: int | None = None,
                       options: SearchOptions | None = None,
                       ) -> tuple[ModelPlan, dict]:
     """Search one phase; returns (realized plan, provenance dict).
     ``kv_tokens`` prices the decode phase's cache read at the paged
-    engine's allocated-blocks depth (see :func:`phase_shape`)."""
+    engine's allocated-blocks depth; ``q_tokens`` prices the mixed step's
+    per-slot query width (see :func:`phase_shape`)."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
-                        kv_tokens=kv_tokens)
+                        kv_tokens=kv_tokens, q_tokens=q_tokens)
     graph = export_graph(arch, shape)
     strat = find_strategy(graph, mesh, phase=phase, options=options)
     prov = {
         "phase": phase,
         "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
-                  "kind": shape.kind},
+                  "kind": shape.kind, "q_tokens": shape.q_tokens},
         "cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
     }
@@ -55,15 +57,16 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
 def baseline_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str,
                         strategy: str, *, seq_len: int, batch: int,
                         kv_tokens: int | None = None,
+                        q_tokens: int | None = None,
                         ) -> tuple[ModelPlan, dict]:
     """Apply a named baseline (data/model/owt) to one phase's graph."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
-                        kv_tokens=kv_tokens)
+                        kv_tokens=kv_tokens, q_tokens=q_tokens)
     graph = export_graph(arch, shape)
     strat = BASELINES[strategy](graph, mesh)
     prov = {"phase": phase,
             "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
-                      "kind": shape.kind}}
+                      "kind": shape.kind, "q_tokens": shape.q_tokens}}
     return strategy_to_plan(strat, arch), prov
 
 
@@ -74,6 +77,7 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                         prompt_len: int = 512,
                         max_batch: int = 8, max_len: int | None = None,
                         decode_kv_tokens: int | None = None,
+                        decode_q_tokens: int | None = None,
                         options: SearchOptions | None = None) -> ParallelPlan:
     """Build a ParallelPlan for ``phases`` under one named strategy.
 
@@ -82,9 +86,13 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     single-token batch against a ``max_len`` cache (default
     ``prompt_len`` when unset) — or, when ``decode_kv_tokens`` is given
     (the paged engine's per-slot allocated-block budget), against that
-    real depth instead of the ``max_len`` reservation.  ``mesh=None``
-    (single device) degrades to the uniform plan regardless of
-    ``strategy``.
+    real depth instead of the ``max_len`` reservation.
+    ``decode_q_tokens`` (>1) prices decode as the *mixed* step of a
+    chunked-prefill engine: each slot amortizes its share of the
+    per-step prefill chunk budget, so the matmul terms grow while the
+    cache read stays put — the plan the search returns reflects that
+    trade.  ``mesh=None`` (single device) degrades to the uniform plan
+    regardless of ``strategy``.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
@@ -105,14 +113,15 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     for phase in phases:
         seq_len, batch = shapes[phase]
         kv = decode_kv_tokens if phase == "decode" else None
+        qt = decode_q_tokens if phase == "decode" else None
         if strategy == "searched":
             plans[phase], phase_meta[phase] = search_phase_plan(
                 arch, mesh, phase, seq_len=seq_len, batch=batch,
-                kv_tokens=kv, options=options)
+                kv_tokens=kv, q_tokens=qt, options=options)
         else:
             plans[phase], phase_meta[phase] = baseline_phase_plan(
                 arch, mesh, phase, strategy, seq_len=seq_len, batch=batch,
-                kv_tokens=kv)
+                kv_tokens=kv, q_tokens=qt)
     import jax
 
     return ParallelPlan(
@@ -128,6 +137,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                  prompt_len: int = 512, max_batch: int = 8,
                  max_len: int | None = None,
                  decode_kv_tokens: int | None = None,
+                 decode_q_tokens: int | None = None,
                  options: SearchOptions | None = None,
                  log=print) -> ParallelPlan:
     """The plan tri-logic every driver shares: ``plan_path`` (load,
@@ -162,7 +172,8 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             arch, mesh, strategy=strategy, phases=phases,
             train_seq=train_seq, train_batch=train_batch,
             prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
-            decode_kv_tokens=decode_kv_tokens, options=options)
+            decode_kv_tokens=decode_kv_tokens,
+            decode_q_tokens=decode_q_tokens, options=options)
         for phase, pm in plan.meta.get("phases", {}).items():
             cost = pm.get("cost_s")
             if cost is not None:

@@ -3,12 +3,13 @@ per-slot decode positions, admit/retire mid-decode), phase-aware:
 prefill and decode execute under their own phase of a
 :class:`~repro.plans.parallel_plan.ParallelPlan`."""
 
-from .engine import ServeEngine, write_slot, write_slot_paged
+from .engine import (ServeEngine, reset_slot_state, write_slot,
+                     write_slot_paged)
 from .fns import make_serve_fns
 from .paging import BlockAllocator, PoolExhausted, blocks_for_request
 from .scheduler import Completion, Request, SlotScheduler, SlotState
 
 __all__ = ["BlockAllocator", "Completion", "PoolExhausted", "Request",
            "ServeEngine", "SlotScheduler", "SlotState",
-           "blocks_for_request", "make_serve_fns", "write_slot",
-           "write_slot_paged"]
+           "blocks_for_request", "make_serve_fns", "reset_slot_state",
+           "write_slot", "write_slot_paged"]

@@ -1,5 +1,6 @@
 """Continuous-batching serve engine: paged (block-pooled) KV cache,
-per-slot decode positions, admit/retire mid-decode.
+per-slot decode positions, admit/retire mid-decode, and **mixed steps**
+(chunked prefill riding the ragged decode batch).
 
 The paper's thesis is that one global parallelization strategy wastes
 hardware because different layers want different dimensions; the old
@@ -8,8 +9,11 @@ was forced into lockstep prefill->decode behind a single scalar position,
 so short requests padded out to the longest and freed cache slots sat
 idle.  The slot-pooled engine fixed the time dimension but still made it
 in *space*: every slot reserved a dense ``max_len`` KV row, so memory
-was priced for the worst case while actual requests are ragged.  This
-engine closes both:
+was priced for the worst case while actual requests are ragged.  Paging
+closed the space dimension; one rigidity remained — prefill and decode
+were two mutually exclusive steps, so a 512-token prefill *stalled every
+decoding slot* for its full duration (the inter-token-latency tail).
+This engine closes all three:
 
 * KV lives in one global pool of fixed-size **blocks**
   (``kv_block_size`` tokens each) plus a per-slot **block table**
@@ -18,30 +22,31 @@ engine closes both:
   list on retire.  Recurrent (mamba / wkv6) state is O(1) in sequence
   length and stays slot-dense; ``kv_block_size=0`` keeps the dense
   per-slot rows (the A/B baseline).
-* queued requests are prefilled at their exact prompt length (batch 1,
-  cache row rounded up to whole blocks) and scattered into their slot's
-  blocks (:func:`write_slot_paged` overwrites every prompt block *in
-  full* and the recurrent row, so a retired request's state can never
-  leak into its successor; later blocks are bound lazily and their stale
-  contents are dead under the per-slot ``kv_len`` mask);
-* every decode step runs all ``max_batch`` slots as one ragged
-  single-token batch with per-slot positions ``(B,)`` — each row RoPE'd,
-  block-scattered and length-masked at its own depth by the
-  ``paged_decode_attention`` op;
+* every step runs all ``max_batch`` slots as ONE ragged mixed batch
+  with per-slot positions ``(B,)`` and per-slot query counts ``q_lens
+  (B,)``: decoding slots contribute 1 token, a newly admitted slot
+  contributes a prompt chunk of up to ``prefill_chunk_tokens`` (Sarathi-
+  style chunked prefill, arXiv:2308.16369), idle/waiting slots 0 — so
+  decoding slots keep emitting tokens *while* prompts stream in.
+  ``prefill_chunk_tokens=0`` restores the old stall-the-world admission
+  (batch-1 prefill + slot write), kept as the A/B oracle exactly like
+  ``kv_block_size=0``.
 * slots retire on EOS or ``max_new_tokens`` and immediately take new
   work (policy "continuous") or wait for the pool to drain (policy
   "static", the lockstep oracle).  Admission reserves each request's
   *worst-case block need* — under paging the binding resource is blocks,
   not slots, so many short requests coexist where few long ones fit.
 
-Decode steps of free slots run as padding rows: their block tables point
-at physical block 0 (the trash block), so their ignored writes can never
-touch a live request.
+Rows of free slots run as padding: their ``q_lens`` entry is 0, so
+attention drops their K/V writes (dense: scattered out of bounds; paged:
+parked in physical block 0, the trash block) and the recurrent mixers
+pass their state through untouched.
 
 Scope: decoder-only LMs (``repro.models.lm`` — dense / MoE / RWKV /
 Mamba-hybrid / VLM text path).  The encoder-decoder arch keeps the
 static driver path (its cache carries a (B, enc_len, D) memory leaf that
-is not slot-shaped).
+is not slot-shaped — though its encoder pass is a natural prefill chunk;
+see ROADMAP).
 """
 
 from __future__ import annotations
@@ -105,6 +110,21 @@ def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
     return jax.tree_util.tree_map_with_path(one, pool, row)
 
 
+def reset_slot_state(cache: dict, slot) -> dict:
+    """Chunked-admission slot hygiene: zero slot ``slot``'s recurrent
+    (mamba / wkv6 / shift) state leaves so nothing of the previous
+    occupant survives.  KV leaves are left alone — stale KV beyond a
+    request's frontier is dead under the per-slot ``kv_len`` mask, and
+    the mixed step overwrites each position before it is ever attended
+    (paged blocks are additionally freshly drawn from the free list)."""
+    def one(path, leaf):
+        if _is_kv_path(path):
+            return leaf
+        return leaf.at[:, slot].set(jnp.zeros((), leaf.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
 class ServeEngine:
     """Drives generation over a block-pooled (or dense slot-pooled) cache.
 
@@ -127,6 +147,15 @@ class ServeEngine:
     capacity — pass less to serve the same slots in a fraction of the
     memory (admission then gates on the block budget and ``submit``
     raises :class:`PoolExhausted` for requests that can never fit).
+
+    ``prefill_chunk_tokens`` is the per-step prompt-token budget of the
+    mixed step: None (default) auto-sizes it (two KV blocks under paging,
+    256 otherwise), a positive value sets it explicitly, and 0 disables
+    chunking — admission then stalls the world on a batch-1 prefill (the
+    A/B oracle).  ``itl_samples`` records per-step wall seconds for every
+    step at whose *entry* at least one slot was mid-decode — under
+    stall-the-world admission the prefill stall lands in those samples,
+    which is exactly the tail the mixed step exists to flatten.
     """
 
     def __init__(self, params, arch: ArchConfig, *, max_batch: int,
@@ -134,7 +163,8 @@ class ServeEngine:
                  q_chunk: int = 256, kernel_backend: str | None = None,
                  dtype=jnp.float32, policy: str = "continuous",
                  kv_block_size: int | None = 128,
-                 kv_pool_blocks: int | None = None):
+                 kv_pool_blocks: int | None = None,
+                 prefill_chunk_tokens: int | None = None):
         if arch.enc_layers:
             raise NotImplementedError(
                 "ServeEngine covers decoder-only LMs; encoder-decoder "
@@ -150,14 +180,20 @@ class ServeEngine:
         has_attn = any(spec.mixer == "attn" for spec in arch.pattern)
         self.block_size = int(kv_block_size or 0) if has_attn else 0
         self.paged = self.block_size > 0
+        if prefill_chunk_tokens is None:
+            self.chunk = 2 * self.block_size if self.paged else 256
+        else:
+            self.chunk = max(0, int(prefill_chunk_tokens))
+        self.chunk = min(self.chunk, self.max_len)
+        self.chunked = self.chunk > 0
         # phase-aware: prefill runs under the plan's prefill phase, the
-        # ragged decode step under its decode phase (a bare ModelPlan
+        # ragged mixed step under its decode phase (a bare ModelPlan
         # applies to both — the pre-phase API).
         self.plan = plan
         self._decode_plan = as_model_plan(plan, arch, "decode")
-        self._prefill, self._decode = make_serve_fns(
+        self._prefill, self._step = make_serve_fns(
             arch, plan, q_chunk=q_chunk, kernel_backend=kernel_backend,
-            jit=True, paged=self.paged)
+            jit=True)
         if self.paged:
             pages = -(-self.max_len // self.block_size)
             usable = (int(kv_pool_blocks) if kv_pool_blocks
@@ -176,10 +212,11 @@ class ServeEngine:
             self.cache = self._mod.init_cache(arch, self.max_batch,
                                               self.max_len, dtype)
             self.scheduler = SlotScheduler(self.max_batch, policy)
+        self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
         mesh = current_mesh()
         if mesh is not None:
             # lay the pooled cache out under the decode phase's
-            # PartitionSpecs once, up front; the jitted decode step
+            # PartitionSpecs once, up front; the jitted mixed step
             # (cache donated) keeps the layout for the engine's lifetime.
             c_sh = to_shardings(
                 cache_pspecs(self.cache, arch, self._decode_plan,
@@ -188,6 +225,7 @@ class ServeEngine:
         self.queue: deque[Request] = deque()
         self._tok = np.zeros((self.max_batch,), np.int32)
         self._pos = np.zeros((self.max_batch,), np.int32)
+        self.itl_samples: list[float] = []
         self.stats: dict[str, float] = {
             "compile_s": 0.0, "prefill_s": 0.0, "prefill_tokens": 0,
             "decode_s": 0.0, "decode_steps": 0, "decode_tokens": 0,
@@ -246,38 +284,78 @@ class ServeEngine:
                     f"{self.block_size}) but the pool holds {usable}")
         self.queue.append(request)
 
+    def _step_widths(self, prompt_lens=()) -> list[int]:
+        """Every step width T the chunked engine can issue for these
+        prompt lengths: 1 (pure decode) plus each chunk the budget policy
+        will grant — whole budgets and per-prompt remainders.  The grant
+        policy hands the full budget to one slot at a time, so this set
+        is exact and the jitted mixed step never compiles mid-trace."""
+        widths = {1}
+        for plen in {int(p) for p in prompt_lens}:
+            r = plen
+            while r > 0:
+                g = min(r, self.chunk)
+                widths.add(g)
+                r -= g
+        return sorted(widths)
+
+    def _sample(self, logits) -> np.ndarray:
+        """argmax of the unified step's single next-token column: the
+        mixed step folds each row's last *live* logits into its ``(B, 1,
+        V)`` output (rows with q_lens == 0 produce garbage the caller
+        ignores)."""
+        return np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
+                          np.int32)
+
     def warmup(self, prompt_lens=()) -> float:
-        """Compile prefill (one trace per distinct prompt length), the
-        ragged decode step and the slot write *before* anything is timed;
-        returns the seconds spent (jit compile + first run).  The dummy
-        traffic flows through the engine's own pool — harmless, since
-        admission overwrites the whole slot row (all prompt blocks under
-        paging) and free rows are never read."""
+        """Compile every shape the serve loop will hit *before* anything
+        is timed; returns the seconds spent (jit compile + first run).
+
+        Chunked: one mixed-step trace per step-width bucket
+        (:meth:`_step_widths` — pure decode plus every chunk size the
+        budget policy can grant for these prompt lengths) and the slot
+        reset, each driven through the same sampling hot path the live
+        loop uses.  Stall-the-world: one prefill trace per distinct
+        prompt length, the slot write, and the ragged decode step.  The
+        dummy traffic flows through the engine's own pool — harmless,
+        since padding-row writes land in the trash block / out of bounds
+        (chunked) or admission overwrites the whole slot row (stall)."""
         t0 = time.perf_counter()
-        for plen in sorted({int(p) for p in prompt_lens}):
-            row = self._mod.init_cache(self.arch, 1,
-                                       self._prompt_row_len(plen),
-                                       self.dtype)
-            logits, row = self._prefill(
-                self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)}, row)
-            if self.paged:
-                nb = -(-plen // self.block_size)
-                trash = jnp.zeros((nb,), jnp.int32)
-                self.cache = self._write(self.cache, row, 0, trash)
-            else:
-                self.cache = self._write(self.cache, row, 0)
-            # exercise the full sampling hot path — the eager argmax /
-            # host transfer compiles too, and must not be charged to the
-            # first request served
-            int(jax.device_get(jnp.argmax(logits[0, -1])))
-        decode_args = (self.params,
-                       jnp.zeros((self.max_batch, 1), jnp.int32),
-                       self.cache,
-                       jnp.zeros((self.max_batch,), jnp.int32))
-        if self.paged:
-            decode_args += (jnp.asarray(self._alloc.tables),)
-        logits, self.cache = self._decode(*decode_args)
-        np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)), np.int32)
+        if self.chunked:
+            bt = jnp.asarray(self._alloc.tables) if self.paged else None
+            for T in self._step_widths(prompt_lens):
+                q_lens = np.zeros((self.max_batch,), np.int32)
+                logits, self.cache = self._step(
+                    self.params, jnp.zeros((self.max_batch, T), jnp.int32),
+                    self.cache, jnp.zeros((self.max_batch,), jnp.int32),
+                    q_lens=jnp.asarray(q_lens), block_tables=bt)
+                self._sample(logits)
+            self.cache = self._reset(self.cache, jnp.int32(0))
+        else:
+            for plen in sorted({int(p) for p in prompt_lens}):
+                row = self._mod.init_cache(self.arch, 1,
+                                           self._prompt_row_len(plen),
+                                           self.dtype)
+                logits, row = self._prefill(
+                    self.params, {"tokens": jnp.zeros((1, plen), jnp.int32)},
+                    row)
+                if self.paged:
+                    nb = -(-plen // self.block_size)
+                    trash = jnp.zeros((nb,), jnp.int32)
+                    self.cache = self._write(self.cache, row, 0, trash)
+                else:
+                    self.cache = self._write(self.cache, row, 0)
+                # exercise the full sampling hot path — the eager argmax /
+                # host transfer compiles too, and must not be charged to
+                # the first request served
+                int(jax.device_get(jnp.argmax(logits[0, -1])))
+            bt = jnp.asarray(self._alloc.tables) if self.paged else None
+            logits, self.cache = self._step(
+                self.params, jnp.zeros((self.max_batch, 1), jnp.int32),
+                self.cache, jnp.zeros((self.max_batch,), jnp.int32),
+                block_tables=bt)
+            np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
+                       np.int32)
         dt = time.perf_counter() - t0
         self.stats["compile_s"] += dt
         return dt
@@ -285,6 +363,16 @@ class ServeEngine:
     # ---------------------------------------------------------------- #
     def _admit_one(self) -> list[Completion]:
         req = self.queue.popleft()
+        if self.chunked:
+            # chunked admission is host-side only: the prompt rides later
+            # mixed steps chunk by chunk; just claim the slot and scrub
+            # its recurrent state (KV is masked, see reset_slot_state)
+            slot = self.scheduler.admit(req, chunked=True)
+            self.cache = self._reset(self.cache, jnp.int32(slot))
+            self._tok[slot] = 0
+            self._pos[slot] = 0
+            self.stats["admitted"] += 1
+            return []
         slot = self.scheduler.admit(req)
         t0 = time.perf_counter()
         tokens = jnp.asarray(req.prompt, jnp.int32)[None, :]
@@ -330,41 +418,121 @@ class ServeEngine:
         return [Completion(uid=req.uid, tokens=list(st.generated),
                            prompt_len=len(req.prompt), finish_reason=reason)]
 
-    def step(self) -> list[Completion]:
-        """Admit every admissible queued request (free slot *and*, under
-        paging, enough unreserved blocks), then run one ragged decode
-        step over the pool; returns the requests that finished."""
-        done: list[Completion] = []
-        for _ in range(self.scheduler.admissible_requests(self.queue)):
-            done.extend(self._admit_one())
-        active = self.scheduler.active
-        if active:
-            t0 = time.perf_counter()
-            if self.paged:
-                for slot, st in active.items():
-                    # lazy boundary crossing: bind the block this step's
-                    # write lands in (draws from the slot's reservation,
-                    # so it cannot fail)
-                    self._alloc.ensure(slot, st.pos)
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(self._tok)[:, None], self.cache,
-                    jnp.asarray(self._pos), jnp.asarray(self._alloc.tables))
-            else:
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(self._tok)[:, None], self.cache,
-                    jnp.asarray(self._pos))
-            nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
-                             np.int32)
-            self.stats["decode_s"] += time.perf_counter() - t0
-            self.stats["decode_steps"] += 1
-            self.stats["decode_tokens"] += len(active)
+    def _mixed_step(self, active) -> list[Completion]:
+        """One unified mixed step over the pool: grant this step's
+        prefill budget, assemble the ragged (B, T) batch, advance every
+        live slot, sample where a next token materialized."""
+        t0 = time.perf_counter()
+        grants = self.scheduler.prefill_grants(self.chunk)
+        T = max([1] + list(grants.values()))
+        toks = np.zeros((self.max_batch, T), np.int32)
+        q_lens = np.zeros((self.max_batch,), np.int32)
+        for slot, st in active.items():
+            g = grants.get(slot, 0)
+            if g > 0:
+                toks[slot, :g] = st.request.prompt[st.pos:st.pos + g]
+                q_lens[slot] = g
+            elif st.prefill_remaining == 0:
+                toks[slot, 0] = self._tok[slot]
+                q_lens[slot] = 1
+            # else: mid-prefill but not granted this step — sits out (0)
+            self._pos[slot] = st.pos
+        if self.paged:
+            bs = self.block_size
             for slot, st in active.items():
+                g = int(q_lens[slot])
+                if g > 0:
+                    # bind every page this slot's writes touch this step
+                    # (draws from the slot's reservation, cannot fail)
+                    for page in range(st.pos // bs,
+                                      (st.pos + g - 1) // bs + 1):
+                        self._alloc.ensure(slot, page * bs)
+        bt = jnp.asarray(self._alloc.tables) if self.paged else None
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(toks), self.cache,
+            jnp.asarray(self._pos), q_lens=jnp.asarray(q_lens),
+            block_tables=bt)
+        nxt = self._sample(logits)
+        done: list[Completion] = []
+        for slot, st in active.items():
+            g = int(q_lens[slot])
+            if g == 0:
+                continue
+            if st.prefill_remaining > 0:                 # prompt chunk
+                st.pos += g
+                st.prefill_remaining -= g
+                self._pos[slot] = st.pos
+                self.stats["prefill_tokens"] += g
+                if st.prefill_remaining == 0:            # prompt done:
+                    tok = int(nxt[slot])                 # first token
+                    st.generated.append(tok)
+                    self._tok[slot] = tok
+                    done.extend(self._maybe_retire(slot))
+            else:                                        # decode token
                 tok = int(nxt[slot])
                 st.generated.append(tok)
                 st.pos += 1
                 self._tok[slot] = tok
                 self._pos[slot] = st.pos
+                self.stats["decode_tokens"] += 1
                 done.extend(self._maybe_retire(slot))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        return done
+
+    def _lockstep_decode(self, active) -> list[Completion]:
+        """Stall-the-world decode: every active slot advances exactly one
+        token (prompts were prefilled whole at admission)."""
+        t0 = time.perf_counter()
+        if self.paged:
+            for slot, st in active.items():
+                # lazy boundary crossing: bind the block this step's
+                # write lands in (draws from the slot's reservation,
+                # so it cannot fail)
+                self._alloc.ensure(slot, st.pos)
+        bt = jnp.asarray(self._alloc.tables) if self.paged else None
+        logits, self.cache = self._step(
+            self.params, jnp.asarray(self._tok)[:, None], self.cache,
+            jnp.asarray(self._pos), block_tables=bt)
+        nxt = np.asarray(jax.device_get(jnp.argmax(logits[:, -1], -1)),
+                         np.int32)
+        done: list[Completion] = []
+        for slot, st in active.items():
+            tok = int(nxt[slot])
+            st.generated.append(tok)
+            st.pos += 1
+            self._tok[slot] = tok
+            self._pos[slot] = st.pos
+            done.extend(self._maybe_retire(slot))
+        self.stats["decode_s"] += time.perf_counter() - t0
+        self.stats["decode_steps"] += 1
+        self.stats["decode_tokens"] += len(active)
+        return done
+
+    def step(self) -> list[Completion]:
+        """Admit every admissible queued request (free slot *and*, under
+        paging, enough unreserved blocks), then run one mixed step over
+        the pool; returns the requests that finished.
+
+        Inter-token latency: when at least one slot was mid-decode at
+        entry, the full wall time of this call — admission (including a
+        stall-the-world prefill, when chunking is off) plus the step —
+        is appended to ``itl_samples``: that is the gap between two of
+        that slot's tokens as a client would observe it."""
+        t_entry = time.perf_counter()
+        decoding_before = any(st.prefill_remaining == 0
+                              for st in self.scheduler.active.values())
+        done: list[Completion] = []
+        for _ in range(self.scheduler.admissible_requests(self.queue)):
+            done.extend(self._admit_one())
+        active = self.scheduler.active
+        if active:
+            if self.chunked:
+                done.extend(self._mixed_step(active))
+            else:
+                done.extend(self._lockstep_decode(active))
+            if decoding_before:
+                self.itl_samples.append(time.perf_counter() - t_entry)
         return done
 
     def run(self, requests=()) -> list[Completion]:

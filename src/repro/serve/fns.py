@@ -1,11 +1,11 @@
 """Serving step builders (moved out of ``repro.train.step`` — building
-the prefill/decode functions is a serving concern).
+the prefill/step functions is a serving concern).
 
-``make_serve_fns`` returns jit-able ``(prefill, decode_step)``.  The
-``plan`` argument is phase-aware: pass a
+``make_serve_fns`` returns jit-able ``(prefill, step)``.  The ``plan``
+argument is phase-aware: pass a
 :class:`~repro.plans.parallel_plan.ParallelPlan` and prefill executes
-under the plan's ``prefill`` phase while decode executes under its
-``decode`` phase — the same layer can (and, per the searched plans,
+under the plan's ``prefill`` phase while the mixed step executes under
+its ``decode`` phase — the same layer can (and, per the searched plans,
 does) shard differently in the two phases.  A bare ``ModelPlan`` (the
 pre-phase API) applies to both; ``None`` means uniform.
 """
@@ -13,6 +13,8 @@ pre-phase API) applies to both; ``None`` means uniform.
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
+from jax import lax
 
 from repro.kernels import dispatch as kernel_dispatch
 from repro.models import model_module
@@ -21,25 +23,43 @@ from repro.models.plan import ModelPlan
 from repro.plans.parallel_plan import ParallelPlan, as_model_plan
 
 
+def _is_kv_path(path) -> bool:
+    return any(getattr(k, "key", None) == "kv" for k in path)
+
+
 def make_serve_fns(arch: ArchConfig,
                    plan: ParallelPlan | ModelPlan | None = None,
                    q_chunk: int = 512, kernel_backend: str | None = None,
-                   *, jit: bool = False, paged: bool = False):
-    """Build ``(prefill, decode_step)``.
+                   *, jit: bool = False):
+    """Build ``(prefill, step)``.
 
-    ``decode_step`` takes ``pos`` as a scalar (static lockstep batch) or a
-    ``(B,)`` vector of per-slot positions (the continuous-batching serve
-    engine's ragged decode).  With ``paged=True`` the decode fn runs over
-    the block pool — ``decode_step(params, token, cache, pos,
-    block_tables)`` with a ``(B, pages)`` int32 table and (B,) per-slot
-    positions; prefill is unchanged (it fills a dense batch-1 row the
-    engine scatters into the slot's blocks).
+    ``step(params, tokens, cache, pos, q_lens=None, block_tables=None)``
+    is the one unified mixed-step fn: a single keyword-normalized
+    signature for dense AND paged caches (pass ``block_tables`` for the
+    block pool, leave it ``None`` for dense — no arity branching at the
+    call site).  ``pos`` is a scalar (static lockstep batch) or a ``(B,)``
+    vector of per-slot positions; ``tokens`` is ``(B, T)`` with ``q_lens``
+    marking how many of the T columns each row actually advances
+    (decoding slots 1, admitting slots a prefill chunk, idle slots 0).
+    At ``T == 1`` with ``q_lens=None`` it is exactly the old single-token
+    ``decode_step``.
+
+    A mixed step (``q_lens`` given, ``T > 1``) returns ``(B, 1, V)``
+    next-token logits — every row's last *live* logits folded into
+    column 0.  Internally it decomposes into a ``(B, 1)`` decode pass
+    (the granted slot masked to ``q_lens == 0``) plus a ``(1, T)``
+    batch-1 chunk pass on the granted row alone, so the chunk never
+    pays the ``(B - 1) × T`` padded-row compute a naive ``(B, T)``
+    execution would.  The decomposition leans on the grant policy:
+    the scheduler hands each step's whole chunk budget to exactly one
+    slot, so when ``T > 1`` precisely one row has ``q_lens == T`` and
+    ``argmax(q_lens)`` locates it inside the jitted graph.
 
     With ``jit=True`` both come back jitted with the cache argument
-    donated.  Donating *prefill*'s cache matters as much as decode's: the
-    cache arrives freshly initialized and without donation peak HBM holds
-    two full KV pools (the zeros plus the filled copy) for the whole
-    prefill.
+    donated.  Donating *prefill*'s cache matters as much as the step's:
+    the cache arrives freshly initialized and without donation peak HBM
+    holds two full KV pools (the zeros plus the filled copy) for the
+    whole prefill.
     """
     prefill_plan = as_model_plan(plan, arch, "prefill")
     decode_plan = as_model_plan(plan, arch, "decode")
@@ -50,19 +70,79 @@ def make_serve_fns(arch: ArchConfig,
             return mod.prefill(params, batch, cache, arch, prefill_plan,
                                q_chunk=q_chunk)
 
-    if paged:
-        def decode_step(params, token, cache, pos, block_tables):
+    if hasattr(mod, "step"):
+        def _model_step(params, tokens, cache, pos, q_lens, block_tables):
+            return mod.step(params, tokens, cache, pos, arch, decode_plan,
+                            q_lens=q_lens, block_tables=block_tables,
+                            q_chunk=q_chunk)
+
+        def step(params, tokens, cache, pos, q_lens=None, block_tables=None):
             with kernel_dispatch.force_backend(kernel_backend):
-                return mod.decode_step(params, token, cache, pos, arch,
-                                       decode_plan,
-                                       block_tables=block_tables)
+                if q_lens is None or tokens.shape[1] == 1:
+                    return _model_step(params, tokens, cache, pos, q_lens,
+                                       block_tables)
+                # Mixed step: one slot carries a T-token prefill chunk,
+                # the rest decode one token (or idle).  Running the full
+                # (B, T) grid would spend (B - 1) × T padded positions
+                # per step — the chunk instead rides as a batch-1 pass
+                # on the granted row only:
+                #   1. (B, 1) decode pass, granted row masked to
+                #      q_lens == 0 (recurrent state untouched; its
+                #      garbage K/V write at pos lands inside [pos,
+                #      pos + T), which step 2 overwrites).
+                #   2. (1, T) chunk pass on row g = argmax(q_lens) —
+                #      the grant policy guarantees q_lens[g] == T.
+                #      Dense / recurrent cache leaves are (n_units, B,
+                #      ...): slice row g, run, write back.  Paged KV
+                #      leaves are a slot-global block pool: pass them
+                #      whole with row g's block-table row.
+                B, T = tokens.shape
+                q_lens = jnp.asarray(q_lens, jnp.int32)
+                pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+                dec_q = jnp.where(q_lens == 1, 1, 0).astype(jnp.int32)
+                logits, cache = _model_step(params, tokens[:, :1], cache,
+                                            pos, dec_q, block_tables)
+                g = jnp.argmax(q_lens)
+
+                def take(path, leaf):
+                    if block_tables is not None and _is_kv_path(path):
+                        return leaf
+                    return lax.dynamic_slice_in_dim(leaf, g, 1, axis=1)
+
+                row = jax.tree_util.tree_map_with_path(take, cache)
+                bt = (None if block_tables is None
+                      else lax.dynamic_slice_in_dim(block_tables, g, 1, 0))
+                chunk_logits, row = _model_step(
+                    params, lax.dynamic_slice_in_dim(tokens, g, 1, 0), row,
+                    lax.dynamic_slice_in_dim(pos, g, 1, 0),
+                    lax.dynamic_slice_in_dim(q_lens, g, 1, 0), bt)
+
+                def put(path, leaf, r):
+                    if block_tables is not None and _is_kv_path(path):
+                        return r    # pool writes already went through bt
+                    return lax.dynamic_update_slice_in_dim(leaf, r, g,
+                                                           axis=1)
+
+                cache = jax.tree_util.tree_map_with_path(put, cache, row)
+                # q_lens[g] == T, so the chunk's last column is row g's
+                # next-token logits; fold it into the decode pass output
+                logits = lax.dynamic_update_slice(
+                    logits, chunk_logits[:, -1:].astype(logits.dtype),
+                    (g, 0, 0))
+                return logits, cache
     else:
-        def decode_step(params, token, cache, pos):
+        # encoder-decoder: no mixed step yet (its encoder pass is a
+        # natural prefill chunk — see ROADMAP); single-token decode only
+        def step(params, tokens, cache, pos, q_lens=None, block_tables=None):
+            if q_lens is not None or block_tables is not None:
+                raise NotImplementedError(
+                    f"{arch.name}: mixed-step serving (q_lens/block_tables) "
+                    "is decoder-only for now")
             with kernel_dispatch.force_backend(kernel_backend):
-                return mod.decode_step(params, token, cache, pos, arch,
+                return mod.decode_step(params, tokens, cache, pos, arch,
                                        decode_plan)
 
     if not jit:
-        return prefill, decode_step
+        return prefill, step
     return (jax.jit(prefill, donate_argnums=(2,)),
-            jax.jit(decode_step, donate_argnums=(2,)))
+            jax.jit(step, donate_argnums=(2,)))

@@ -68,11 +68,18 @@ class SlotState:
     """Device-slot bookkeeping for one in-flight request: ``pos`` is the
     next cache write position (== tokens currently in the slot's cache
     row), ``generated`` the tokens sampled so far, ``reserved_blocks``
-    the worst-case block budget held under a paged cache."""
+    the worst-case block budget held under a paged cache.
+
+    Under chunked (mixed-step) admission ``prefill_remaining`` counts the
+    prompt tokens not yet fed through the model — the slot decodes only
+    once it reaches 0; ``seq`` is the scheduler's monotone admission
+    counter, used to grant the per-step prefill budget oldest-first."""
     request: Request
     pos: int
     generated: list[int] = field(default_factory=list)
     reserved_blocks: int = 0
+    prefill_remaining: int = 0
+    seq: int = 0
 
 
 class SlotScheduler:
@@ -95,6 +102,7 @@ class SlotScheduler:
         self.total_blocks = int(total_blocks)   # usable (trash excluded)
         self.max_len = int(max_len)
         self._slots: list[SlotState | None] = [None] * max_batch
+        self._seq = 0                      # monotone admission counter
 
     def blocks_for(self, request: Request) -> int:
         """Worst-case block reservation for ``request`` (0 when block
@@ -158,9 +166,14 @@ class SlotScheduler:
             n += 1
         return n
 
-    def admit(self, request: Request) -> int:
+    def admit(self, request: Request, *, chunked: bool = False) -> int:
         """Place ``request`` in the lowest free slot (reserving its block
-        budget under block accounting); returns the slot."""
+        budget under block accounting); returns the slot.
+
+        With ``chunked=True`` the prompt is NOT assumed prefilled: the
+        slot starts at ``pos=0`` with the whole prompt outstanding in
+        ``prefill_remaining``, to be fed through mixed steps chunk by
+        chunk (:meth:`prefill_grants`)."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
@@ -170,10 +183,36 @@ class SlotScheduler:
                 f"request {request.uid} needs {need} blocks but only "
                 f"{self.free_block_budget} are unreserved")
         slot = free[0]
-        self._slots[slot] = SlotState(request=request,
-                                      pos=len(request.prompt),
-                                      reserved_blocks=need)
+        plen = len(request.prompt)
+        self._slots[slot] = SlotState(
+            request=request,
+            pos=0 if chunked else plen,
+            reserved_blocks=need,
+            prefill_remaining=plen if chunked else 0,
+            seq=self._seq)
+        self._seq += 1
         return slot
+
+    def prefill_grants(self, budget: int) -> dict[int, int]:
+        """Mixed-step token-budget policy: which slots prefill how many
+        prompt tokens this step.
+
+        The whole per-step budget goes to ONE slot — the oldest admission
+        (lowest ``seq``) still holding prompt tokens — as
+        ``min(remaining, budget)``.  Concentrating the budget keeps the
+        jit step-width buckets bounded ({1, budget} plus per-prompt
+        remainders, all enumerable from the warmup prompt lengths) and
+        finishes prompts in admission order.  Returns {} when the budget
+        is off (<= 0) or nothing is waiting to prefill."""
+        if budget <= 0:
+            return {}
+        waiting = [(s.seq, slot) for slot, s in self.active.items()
+                   if s.prefill_remaining > 0]
+        if not waiting:
+            return {}
+        _, slot = min(waiting)
+        st = self.state(slot)
+        return {slot: min(st.prefill_remaining, budget)}
 
     def retire(self, slot: int) -> SlotState:
         """Free ``slot``; returns its final state."""

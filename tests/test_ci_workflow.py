@@ -170,11 +170,15 @@ def test_compare_bench_gate_logic():
 
     base = {"continuous_speedup": 1.34,
             "kv_reserved_frac": 0.33,
-            "modes": {"continuous": {"kv_bytes_reserved": 1000}}}
+            "chunked_itl_p99_ratio": 0.55,
+            "modes": {"continuous": {"kv_bytes_reserved": 1000,
+                                     "itl_p99_ms": 40.0}}}
 
-    def cur(speedup=1.34, frac=0.33, kv=1000):
+    def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55):
         return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
-                "modes": {"continuous": {"kv_bytes_reserved": kv}}}
+                "chunked_itl_p99_ratio": ratio,
+                "modes": {"continuous": {"kv_bytes_reserved": kv,
+                                         "itl_p99_ms": itl}}}
 
     assert compare(base, cur(), 0.15) == []
     # >15% speedup drop but still >= 1.0: runner jitter, not a failure
@@ -187,6 +191,17 @@ def test_compare_bench_gate_logic():
                for f in compare(base, cur(kv=1200), 0.15))
     assert any("kv_reserved_frac" in f
                for f in compare(base, cur(frac=0.40), 0.15))
+    # the ITL tail gates strictly: >15% growth means admissions are
+    # stalling decode again
+    assert any("itl_p99_ms" in f
+               for f in compare(base, cur(itl=50.0), 0.15))
+    assert compare(base, cur(itl=44.0), 0.15) == []
+    # the chunked/unchunked ratio is noise-floored at parity: any swing
+    # below 1.0 is jitter while chunking still beats stall-the-world...
+    assert compare(base, cur(ratio=0.95), 0.15) == []
+    # ...but growth past both the floor and the tolerance fails
+    assert any("chunked_itl_p99_ratio" in f
+               for f in compare(base, cur(ratio=1.2), 0.15))
     # a metric the baseline proves existed must not vanish silently
     gone = cur()
     del gone["kv_reserved_frac"]

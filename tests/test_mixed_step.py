@@ -1,0 +1,160 @@
+"""Unified mixed-step serving: chunked prefill riding the ragged decode
+batch must be a pure *scheduling* change — token-for-token identical to
+the stall-the-world engine (``prefill_chunk_tokens=0``, the pre-chunking
+A/B oracle) on the same requests.
+
+Covered: all four arch families on the serving path (dense GQA, MoE,
+RWKV6 recurrence, Mamba hybrid) under both cache layouts (dense rows and
+paged blocks), staggered admits with a mid-decode submit, an EOS
+retirement mid-stream, and chunk budgets straddling the paged block
+boundary (block_size - 1 / block_size / block_size + 1).  Equality is
+exact, not approximate: every device op on the mixed-step path is
+row-independent, and the recurrent identity masking (w=1/k=0 for wkv6,
+dt=0 for mamba) makes padded positions true no-ops.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import lm
+from repro.serve import Request, ServeEngine
+
+# one arch per family on the serving path: dense GQA attention, MoE,
+# RWKV6 recurrence, Mamba-hybrid (mamba + attn + MoE interleave)
+ARCHS = ["llama3_2_1b", "olmoe_1b_7b", "rwkv6_1b6", "jamba_1_5_large"]
+
+
+def _arch(name):
+    arch = C.reduced(name)
+    if arch.n_experts:
+        # high capacity: routing drops would otherwise depend on batch
+        # composition and generation could not be batch-size-invariant
+        arch = dataclasses.replace(arch, capacity_factor=8.0)
+    return arch
+
+
+def _params(arch):
+    return lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+
+
+def _prompts(arch, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [tuple(int(t) for t in rng.integers(1, arch.vocab, l))
+            for l in lens]
+
+
+def _free_run(params, arch, prompt, max_new, max_len):
+    """Unconstrained batch-1 generation, used only to pick an EOS token
+    a request genuinely produces mid-stream."""
+    cache = lm.init_cache(arch, 1, max_len, jnp.float32)
+    logits, cache = lm.prefill(
+        params, {"tokens": jnp.asarray(prompt, jnp.int32)[None]}, cache, arch)
+    out = [int(jnp.argmax(logits[0, -1]))]
+    pos = len(prompt)
+    while len(out) < max_new:
+        logits, cache = lm.decode_step(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache,
+            jnp.int32(pos), arch)
+        out.append(int(jnp.argmax(logits[0, -1])))
+        pos += 1
+    return out
+
+
+def _serve(params, arch, reqs, lens, *, max_len, chunk, kv_block_size,
+           max_batch=2):
+    """One engine pass with staggered admits and a mid-decode submit;
+    returns {uid: (tokens, finish_reason)}."""
+    engine = ServeEngine(params, arch, max_batch=max_batch, max_len=max_len,
+                         kv_block_size=kv_block_size,
+                         prefill_chunk_tokens=chunk)
+    engine.warmup(lens)
+    for r in reqs[:3]:
+        engine.submit(r)
+    got = []
+    for _ in range(2):                     # run a few steps mid-stream...
+        got.extend(engine.step())
+    for r in reqs[3:]:                     # ...then submit more mid-decode
+        engine.submit(r)
+    while engine.busy:
+        got.extend(engine.step())
+    assert engine.stats["retired"] == len(reqs)
+    if chunk:
+        # every prompt token was fed through mixed steps, none through
+        # the stall-the-world prefill fn
+        assert engine.stats["prefill_tokens"] == sum(lens)
+        assert engine.stats["prefill_s"] == 0.0
+    return {c.uid: (c.tokens, c.finish_reason) for c in got}
+
+
+@pytest.mark.parametrize("kv_block_size", [0, 4],
+                         ids=["dense", "paged"])
+@pytest.mark.parametrize("name", ARCHS)
+def test_chunked_matches_stall_the_world_oracle(name, kv_block_size):
+    """chunk=4 splits every prompt here into multiple mixed steps; the
+    completions (tokens AND finish reasons, including a genuine EOS
+    retirement mid-stream) must equal the chunk-0 engine's exactly."""
+    arch = _arch(name)
+    params = _params(arch)
+    max_len = 24
+    lens = [5, 9, 3, 9, 5]
+    news = [4, 2, 6, 3, 5]
+    prompts = _prompts(arch, lens)
+
+    # force one genuine EOS retirement: request 2's eos_id is a token its
+    # unconstrained generation first produces mid-stream (not at step 0)
+    free2 = _free_run(params, arch, prompts[2], news[2], max_len)
+    eos2 = next((t for i, t in enumerate(free2[1:], 1)
+                 if t not in free2[:i]), None)
+    eos = [None, None, eos2, None, None]
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=news[i],
+                    eos_id=eos[i]) for i in range(5)]
+
+    want = _serve(params, arch, reqs, lens, max_len=max_len, chunk=0,
+                  kv_block_size=kv_block_size)
+    got = _serve(params, arch, reqs, lens, max_len=max_len, chunk=4,
+                 kv_block_size=kv_block_size)
+    assert got == want
+    if eos2 is not None:
+        assert got[2][1] == "eos"
+
+
+@pytest.mark.parametrize("chunk", [3, 4, 5],
+                         ids=["bs-1", "bs", "bs+1"])
+def test_chunk_straddles_paged_block_boundary(chunk):
+    """Chunk budgets below / at / above the paged block size: the chunk
+    writes must land in lazily-bound blocks across page boundaries and
+    still reproduce the stall-the-world completions."""
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    max_len = 24
+    lens = [5, 9, 3, 9, 5]
+    news = [4, 2, 6, 3, 5]
+    prompts = _prompts(arch, lens)
+    reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=news[i])
+            for i in range(5)]
+
+    want = _serve(params, arch, reqs, lens, max_len=max_len, chunk=0,
+                  kv_block_size=4)
+    got = _serve(params, arch, reqs, lens, max_len=max_len, chunk=chunk,
+                 kv_block_size=4)
+    assert got == want
+
+
+def test_step_rejects_malformed_pos_and_q_lens():
+    """The mixed-step entry point validates its per-slot vectors instead
+    of silently broadcasting them."""
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    B, T, max_len = 2, 4, 16
+    toks = jnp.ones((B, T), jnp.int32)
+    cache = lm.init_cache(arch, B, max_len, jnp.float32)
+    with pytest.raises(ValueError, match="step pos"):
+        lm.step(params, toks, cache, jnp.zeros((B, 1), jnp.int32), arch)
+    with pytest.raises(ValueError, match="step q_lens"):
+        lm.step(params, toks, cache, jnp.zeros((B,), jnp.int32), arch,
+                q_lens=jnp.ones((B + 1,), jnp.int32))

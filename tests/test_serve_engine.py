@@ -246,6 +246,30 @@ def test_scheduler_policies_and_validation():
         Request(uid=9, prompt=(1,), max_new_tokens=0)
 
 
+@pytest.mark.parametrize("kv_block_size", [0, 4], ids=["dense", "paged"])
+def test_warmup_compiles_every_mixed_step_bucket(kv_block_size):
+    """``warmup`` must enumerate every step-width bucket the chunked
+    engine can hit on the given prompt lengths ({1, chunk} plus the
+    greedy per-prompt remainders) — a full staggered trace afterwards
+    triggers zero recompiles of the jitted mixed-step fn."""
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    max_len = 24
+    lens = [5, 9, 3]
+    prompts = _prompts(arch, lens, seed=4)
+    engine = ServeEngine(params, arch, max_batch=2, max_len=max_len,
+                         kv_block_size=kv_block_size,
+                         prefill_chunk_tokens=4)
+    engine.warmup(lens)
+    compiled = engine._step._cache_size()
+    got = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=4)
+                      for i in range(3)])
+    assert len(got) == 3
+    assert engine._step._cache_size() == compiled, (
+        "mixed-step recompiled during the trace — a step width escaped "
+        "warmup's bucket enumeration")
+
+
 def test_engine_rejects_oversized_and_encdec():
     arch = _arch("llama3_2_1b")
     params = _params(arch)
