@@ -19,7 +19,16 @@ fails when a watched metric regresses by more than ``--max-regression``:
   stalling decode again;
 * ``chunked_itl_p99_ratio`` — chunked/unchunked p99 on the same trace;
   a 1.0 noise floor absorbs jitter while chunking is at-or-better than
-  stall-the-world, growth past both floor and tolerance fails.
+  stall-the-world, growth past both floor and tolerance fails;
+* ``prefix_hit_rate`` — fraction of requests that reused cached prompt
+  blocks on the smoke trace's shared-prefix segment; carries a 0.5
+  noise floor (trace composition fixes the expected rate well above it,
+  so a dip below both the tolerance and the floor means the prefix
+  cache genuinely stopped matching);
+* ``prefill_tokens_saved`` — prompt tokens served from shared blocks
+  instead of re-prefilled; deterministic for a fixed trace (hits depend
+  on index state, not arrival pacing), so it gates strictly like the KV
+  byte metrics.
 
 A missing baseline (first run, new cache key, metric added since) passes
 with a note — the gate tightens as the trajectory accumulates, it never
@@ -57,6 +66,8 @@ WATCHED = (
     ("kv_reserved_frac", "down", None),
     ("itl_p99_ms", "down", None),
     ("chunked_itl_p99_ratio", "down", 1.0),
+    ("prefix_hit_rate", "up", 0.5),
+    ("prefill_tokens_saved", "up", None),
 )
 
 

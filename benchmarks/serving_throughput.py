@@ -26,6 +26,14 @@ inter-token latency percentiles (``itl_p50_ms``/``itl_p95_ms``/
 at entry, so a stall-the-world prefill lands in the tail), and the
 top-level ``chunked_itl_p99_ratio`` (continuous / unchunked p99) is the
 headline chunking win the gate watches.
+
+The trace can carry a shared-prefix segment (``--shared-prefix-len`` /
+``--shared-frac``; on by default in ``--smoke``): those requests open
+with one common system-prompt prefix, and the continuous mode's
+copy-on-write prefix cache serves it from shared blocks — reported as
+``prefix_hit_rate`` (requests that reused cached blocks) and
+``prefill_tokens_saved`` (prompt tokens never re-prefilled), both gated
+in CI alongside the other serving metrics.
 """
 
 from __future__ import annotations
@@ -38,7 +46,8 @@ from pathlib import Path
 
 
 def make_trace(n: int, rate: float, prompt_buckets, gen_range, vocab: int,
-               seed: int = 0) -> list[dict]:
+               seed: int = 0, shared_prefix_len: int = 0,
+               shared_frac: float = 0.0) -> list[dict]:
     """A reproducible request trace.
 
     Arrival times are Poisson (exponential inter-arrival at ``rate``
@@ -47,6 +56,14 @@ def make_trace(n: int, rate: float, prompt_buckets, gen_range, vocab: int,
     prefill shape can be compiled up front), output lengths uniformly
     from ``gen_range`` (inclusive).  Returns dicts, not engine Requests —
     the trace is engine-agnostic.
+
+    ``shared_prefix_len > 0`` adds the production shape prefix caching
+    exists for: a ``shared_frac`` fraction of requests open with one
+    common ``shared_prefix_len``-token prefix (a system prompt) followed
+    by a unique tail — their bucket length keeps the tail when it
+    reaches past the prefix, else the tail is a single token.  With
+    ``shared_prefix_len=0`` (the default) the draw order is untouched,
+    so existing seeds reproduce their exact pre-sharing traces.
     """
     import numpy as np
 
@@ -58,10 +75,24 @@ def make_trace(n: int, rate: float, prompt_buckets, gen_range, vocab: int,
     plens = rng.choice(np.asarray(prompt_buckets), n)
     lo, hi = gen_range
     gens = rng.integers(lo, hi + 1, n)
+    if shared_prefix_len > 0:
+        shared = tuple(int(t)
+                       for t in rng.integers(1, vocab, shared_prefix_len))
+        is_shared = rng.random(n) < shared_frac
+    else:
+        shared, is_shared = (), np.zeros(n, bool)
+
+    def prompt(i):
+        if is_shared[i]:
+            tail = max(1, int(plens[i]) - shared_prefix_len)
+            return shared + tuple(int(t)
+                                  for t in rng.integers(1, vocab, tail))
+        return tuple(int(t) for t in rng.integers(1, vocab, plens[i]))
+
     return [{
         "uid": i,
         "arrival": float(arrivals[i]),
-        "prompt": tuple(int(t) for t in rng.integers(1, vocab, plens[i])),
+        "prompt": prompt(i),
         "max_new_tokens": int(gens[i]),
     } for i in range(n)]
 
@@ -115,6 +146,11 @@ def run_mode(engine, trace: list[dict]) -> dict:
         "kv_bytes_reserved": int(engine.kv_bytes_reserved),
         "kv_block_size": int(engine.block_size),
         "peak_blocks_in_use": int(engine.peak_blocks_in_use),
+        # prefix-sharing truth: fraction of requests that reused cached
+        # prompt blocks, and the prompt tokens never re-prefilled (both
+        # 0 where sharing is off or inert — dense / unchunked modes)
+        "prefix_hit_rate": round(float(engine.prefix_hit_rate), 4),
+        "prefill_tokens_saved": int(engine.prefill_tokens_saved),
     }
     if engine.itl_samples:
         # wall time of each step that had a decoding slot at entry: a
@@ -131,7 +167,9 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   prompt_buckets, gen_range, out: str, seed: int = 0,
                   strategy: str = "uniform", plan_path: str = "",
                   save_plan: str = "", kv_block_size: int = 128,
-                  kv_pool_blocks: int = 0, max_len: int = 0) -> dict:
+                  kv_pool_blocks: int = 0, max_len: int = 0,
+                  shared_prefix_len: int = 0,
+                  shared_frac: float = 0.0) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -140,7 +178,7 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
     from repro.launch.serve import resolve_serve_plan, serve_mesh
     from repro.launch.train import reduced_arch
     from repro.models import model_module
-    from repro.serve import ServeEngine, blocks_for_request
+    from repro.serve import ServeConfig, ServeEngine, blocks_for_request
 
     arch = reduced_arch(configs.get(arch_name), width, depth, vocab, 4)
     max_len = max_len or (max(prompt_buckets) + gen_range[1])
@@ -155,11 +193,13 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         strategy=strategy, prompt_len=max(prompt_buckets),
         max_batch=max_batch, max_len=max_len,
         kv_block_size=kv_block_size, typical_tokens=typical,
-        prefill_chunk_tokens=chunk, save_plan=save_plan)
+        prefill_chunk_tokens=chunk,
+        shared_prefix_tokens=shared_prefix_len, save_plan=save_plan)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
-                       arch.vocab, seed)
+                       arch.vocab, seed, shared_prefix_len=shared_prefix_len,
+                       shared_frac=shared_frac)
     buckets = sorted({len(d["prompt"]) for d in trace})
     if kv_block_size and not kv_pool_blocks:
         # auto pool: every slot simultaneously holding the trace's
@@ -177,6 +217,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         "gen_range": list(map(int, gen_range)), "seed": seed,
         "max_len": int(max_len), "kv_block_size": int(kv_block_size),
         "kv_pool_blocks": int(kv_pool_blocks),
+        "shared_prefix_len": int(shared_prefix_len),
+        "shared_frac": float(shared_frac),
         # the plan the trace executed under, so the perf trajectory can
         # attribute throughput moves to strategy moves (plan-vs-uniform
         # speedup accumulates across CI runs)
@@ -201,11 +243,10 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         runs.append(("dense", "continuous", 0, 0, chunk))
     with use_mesh(mesh if n_dev > 1 else None):
         for mode, policy, bs, pool, ck in runs:
-            engine = ServeEngine(params, arch, max_batch=max_batch,
-                                 max_len=max_len, plan=plan, q_chunk=256,
-                                 policy=policy, kv_block_size=bs,
-                                 kv_pool_blocks=pool or None,
-                                 prefill_chunk_tokens=ck)
+            engine = ServeEngine(params, arch, ServeConfig(
+                max_batch=max_batch, max_len=max_len, policy=policy,
+                kv_block_size=bs, kv_pool_blocks=pool or None,
+                prefill_chunk_tokens=ck, q_chunk=256), plan=plan)
             engine.warmup(buckets)
             report["modes"][mode] = run_mode(engine, trace)
             m = report["modes"][mode]
@@ -214,7 +255,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   f"{m['decode_steps']} decode steps  "
                   f"p95 latency {m['latency_p95_s']*1e3:.0f} ms  "
                   f"itl p99 {m.get('itl_p99_ms', 0):.1f} ms  "
-                  f"kv {m['kv_bytes_reserved']/2**20:.2f} MiB")
+                  f"kv {m['kv_bytes_reserved']/2**20:.2f} MiB  "
+                  f"prefix hit {m['prefix_hit_rate']:.2f}")
     modes = report["modes"]
     report["continuous_speedup"] = round(
         modes["continuous"]["out_tok_per_s"]
@@ -228,6 +270,16 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
             / max(modes["unchunked"]["itl_p99_ms"], 1e-9), 3)
         print(f"chunked/unchunked itl p99: "
               f"{report['chunked_itl_p99_ratio']}x")
+    # prefix sharing only materializes in the chunked paged mode (the
+    # chunk is what skips the cached tokens) — surface its metrics top
+    # level so the CI gate watches them like the other headline numbers
+    report["prefix_hit_rate"] = modes["continuous"]["prefix_hit_rate"]
+    report["prefill_tokens_saved"] = (
+        modes["continuous"]["prefill_tokens_saved"])
+    if report["prefix_hit_rate"] or report["prefill_tokens_saved"]:
+        print(f"prefix cache: hit rate "
+              f"{report['prefix_hit_rate']:.2f}, "
+              f"{report['prefill_tokens_saved']} prefill tokens saved")
     if "dense" in modes:
         report["paged_speedup"] = round(
             modes["continuous"]["out_tok_per_s"]
@@ -268,6 +320,14 @@ def main() -> None:
     ap.add_argument("--kv-pool-blocks", type=int, default=0,
                     help="usable paged-pool blocks (0 = auto: every slot "
                          "holding the trace's worst-case request)")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="length of the common prompt prefix a "
+                         "--shared-frac fraction of requests open with "
+                         "(0 = no shared segment); exercises the "
+                         "copy-on-write prefix cache")
+    ap.add_argument("--shared-frac", type=float, default=0.0,
+                    help="fraction of requests that carry the shared "
+                         "prefix")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--strategy", default="uniform",
                     choices=["uniform", "data", "model", "owt", "searched"],
@@ -289,15 +349,20 @@ def main() -> None:
               gen_range=(args.gen_min, args.gen_max), out=args.out,
               seed=args.seed, strategy=args.strategy, plan_path=args.plan,
               save_plan=args.save_plan, kv_block_size=args.kv_block_size,
-              kv_pool_blocks=args.kv_pool_blocks, max_len=args.max_len)
+              kv_pool_blocks=args.kv_pool_blocks, max_len=args.max_len,
+              shared_prefix_len=args.shared_prefix_len,
+              shared_frac=args.shared_frac)
     if args.smoke:
         # CI-sized model, but the trace shape of the paged-KV acceptance
         # run: ragged 16-512 token prompts against a 2048-token row
-        # budget, so kv_reserved_frac measures the real paging win
+        # budget, so kv_reserved_frac measures the real paging win; 75%
+        # of requests open with a common 384-token (3-block) system
+        # prompt so the prefix-cache gate exercises real hits
         kw.update(width=128, depth=2, vocab=256, max_batch=4,
                   n_requests=24, rate=200.0,
                   prompt_buckets=(16, 64, 256, 512),
-                  gen_range=(2, 40), seed=1, max_len=2048)
+                  gen_range=(2, 40), seed=1, max_len=2048,
+                  shared_prefix_len=384, shared_frac=0.75)
     run_benchmark(**kw)
 
 

@@ -9,9 +9,13 @@ allocation; ``--kv-pool-blocks`` bounds the pool) — ``--kv-block-size
 0`` keeps the dense per-slot ``max_len`` rows.  Prompts prefill in
 chunks *inside* the decode batch (mixed steps; ``--prefill-chunk-tokens``
 sets the per-step budget, 0 restores stall-the-world prefill) so
-in-flight decodes never stall behind an admission.  ``--no-continuous``
-keeps the lockstep static-batch oracle (admit a full batch, drain it,
-admit the next) for A/B comparison.
+in-flight decodes never stall behind an admission.  Identical whole
+prompt blocks are shared between requests through the refcounted
+copy-on-write prefix index (``--no-prefix-cache`` disables it,
+``--prefix-evict`` picks the retention policy); a hit skips prefill for
+the cached tokens and charges admission only the new blocks.
+``--no-continuous`` keeps the lockstep static-batch oracle (admit a
+full batch, drain it, admit the next) for A/B comparison.
 
 The strategy flags mirror ``repro.launch.train``: ``--strategy
 {uniform,data,model,owt,searched}`` builds a phase-aware ParallelPlan
@@ -47,7 +51,8 @@ from repro.data import make_dataset
 from repro.models import model_module
 from repro.models.arch import ShapeSpec
 from repro.plans import ParallelPlan, STRATEGIES, resolve_plan
-from repro.serve import Request, ServeEngine, make_serve_fns
+from repro.serve import (PrefixCache, Request, ServeConfig, ServeEngine,
+                         make_serve_fns)
 
 from .train import reduced_arch
 
@@ -72,6 +77,7 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
                        kv_block_size: int = 0,
                        typical_tokens: int | None = None,
                        prefill_chunk_tokens: int = 0,
+                       shared_prefix_tokens: int = 0,
                        save_plan: str = "") -> ParallelPlan:
     """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
     serving process executes are prefill + decode (shared by this
@@ -91,10 +97,22 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
     per-slot query width is ``ceil((max_batch - 1 + chunk) / max_batch)``
     and the searched decode plan sees the matmul work the mixed step
     actually does.
+
+    With prefix caching, ``shared_prefix_tokens`` of that typical budget
+    live in blocks shared across the whole slot pool — physically
+    allocated *once*, not per request — so the amortized per-slot depth
+    is ``unique + ceil(shared / max_batch)``.  The pricing stays at
+    allocated-physical-block depth: the searched decode plan sees the
+    KV bytes the pool actually holds, which is the whole point of
+    sharing (PaSE's argument that the search is only as good as the
+    cost model's memory truth).
     """
     kv_tokens = None
     if kv_block_size:
         tokens = min(typical_tokens or max_len, max_len)
+        shared = min(max(0, shared_prefix_tokens), tokens)
+        if shared and max_batch > 1:
+            tokens = (tokens - shared) + -(-shared // max_batch)
         kv_tokens = -(-tokens // kv_block_size) * kv_block_size
     q_tokens = None
     if prefill_chunk_tokens > 0:
@@ -190,6 +208,22 @@ def main() -> None:
                          "engine default: 2*block_size paged, 256 dense; "
                          "0 = stall-the-world prefill, the pre-chunking "
                          "behavior)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable copy-on-write prefix sharing in the "
+                         "paged pool (the sharing-off oracle; sharing is "
+                         "on by default wherever it is sound: paged + "
+                         "chunked + attention-only arch)")
+    ap.add_argument("--prefix-evict", default="lru",
+                    choices=list(PrefixCache.EVICTION),
+                    help="prefix-index retention: lru keeps published "
+                         "blocks warm after their requests retire "
+                         "(evicted leaf-first when the pool runs dry), "
+                         "none shares only between concurrent requests")
+    ap.add_argument("--shared-prefix-tokens", type=int, default=0,
+                    help="typical shared-prefix length for decode-phase "
+                         "plan pricing: these tokens are allocated once "
+                         "across the pool, so per-slot KV depth is "
+                         "amortized (0 = no sharing assumed)")
     ap.add_argument("--strategy", default="uniform",
                     choices=list(STRATEGIES),
                     help="parallelization plan: uniform/data/model/owt "
@@ -239,6 +273,7 @@ def main() -> None:
         strategy=args.strategy, prompt_len=args.prompt_len,
         max_batch=args.batch, max_len=max_len,
         kv_block_size=args.kv_block_size, prefill_chunk_tokens=chunk,
+        shared_prefix_tokens=args.shared_prefix_tokens,
         save_plan=args.save_plan)
     if arch.enc_layers:
         with use_mesh(mesh if n_dev > 1 else None):
@@ -260,11 +295,16 @@ def main() -> None:
     mode = "static" if args.no_continuous else "continuous"
     with use_mesh(mesh if n_dev > 1 else None):
         engine = ServeEngine(
-            params, arch, max_batch=args.batch, max_len=max_len, plan=plan,
-            q_chunk=256, kernel_backend=args.kernel_backend or None,
-            policy=mode, kv_block_size=args.kv_block_size,
-            kv_pool_blocks=args.kv_pool_blocks or None,
-            prefill_chunk_tokens=chunk)
+            params, arch,
+            ServeConfig(
+                max_batch=args.batch, max_len=max_len, policy=mode,
+                kv_block_size=args.kv_block_size,
+                kv_pool_blocks=args.kv_pool_blocks or None,
+                prefill_chunk_tokens=chunk, q_chunk=256,
+                kernel_backend=args.kernel_backend or None,
+                prefix_cache=not args.no_prefix_cache,
+                prefix_evict=args.prefix_evict),
+            plan=plan)
         # warm up on the *actual* request prompt lengths — for frontend
         # (VLM) archs the dataset emits prompts shorter than
         # --prompt-len, and a mis-bucketed warmup would push the real
@@ -299,6 +339,11 @@ def main() -> None:
         print(f"decode:  {s['decode_s']*1e3:.1f} ms over "
               f"{int(s['decode_steps'])} ragged steps "
               f"({s['decode_tokens']/max(s['decode_s'],1e-9):.0f} tok/s)")
+    if engine.prefix is not None:
+        print(f"prefix cache: hit_rate={engine.prefix_hit_rate:.2f} "
+              f"prefill_tokens_saved={engine.prefill_tokens_saved} "
+              f"(evict={engine.config.prefix_evict}, "
+              f"cached_blocks={engine.prefix.cached_blocks})")
     if engine.itl_samples:
         itl = np.percentile(np.asarray(engine.itl_samples) * 1e3,
                             [50, 95, 99])

@@ -1,15 +1,20 @@
 """Continuous-batching serving subsystem (paged block-pooled KV cache,
-per-slot decode positions, admit/retire mid-decode), phase-aware:
-prefill and decode execute under their own phase of a
-:class:`~repro.plans.parallel_plan.ParallelPlan`."""
+per-slot decode positions, admit/retire mid-decode, copy-on-write prefix
+sharing), phase-aware: prefill and decode execute under their own phase
+of a :class:`~repro.plans.parallel_plan.ParallelPlan`.  Engine knobs
+live on :class:`ServeConfig`; the bare-kwarg ``ServeEngine(...)`` form
+is deprecated."""
 
-from .engine import (ServeEngine, reset_slot_state, write_slot,
+from .config import ServeConfig
+from .engine import (ServeEngine, copy_block, reset_slot_state, write_slot,
                      write_slot_paged)
 from .fns import make_serve_fns
-from .paging import BlockAllocator, PoolExhausted, blocks_for_request
+from .paging import (BlockAllocator, PoolExhausted, PrefixCache,
+                     blocks_for_request)
 from .scheduler import Completion, Request, SlotScheduler, SlotState
 
-__all__ = ["BlockAllocator", "Completion", "PoolExhausted", "Request",
-           "ServeEngine", "SlotScheduler", "SlotState",
-           "blocks_for_request", "make_serve_fns", "reset_slot_state",
-           "write_slot", "write_slot_paged"]
+__all__ = ["BlockAllocator", "Completion", "PoolExhausted", "PrefixCache",
+           "Request", "ServeConfig", "ServeEngine", "SlotScheduler",
+           "SlotState", "blocks_for_request", "copy_block",
+           "make_serve_fns", "reset_slot_state", "write_slot",
+           "write_slot_paged"]

@@ -52,6 +52,7 @@ see ROADMAP).
 from __future__ import annotations
 
 import time
+import warnings
 from collections import deque
 
 import jax
@@ -65,39 +66,37 @@ from repro.models.plan import ModelPlan
 from repro.plans import cache_pspecs, to_shardings
 from repro.plans.parallel_plan import ParallelPlan, as_model_plan
 
+from .config import LEGACY_KWARGS, ServeConfig
 from .fns import make_serve_fns
-from .paging import BlockAllocator, PoolExhausted
+from .paging import BlockAllocator, PoolExhausted, PrefixCache
 from .scheduler import Completion, Request, SlotScheduler
-
-
-def write_slot(pool: dict, row: dict, slot) -> dict:
-    """Overwrite slot ``slot`` of the dense pooled cache with a batch-1
-    cache.
-
-    Every leaf is (n_units, B, ...) vs (n_units, 1, ...); the whole row is
-    replaced — including KV positions beyond the new request's prompt and
-    the recurrent (mamba / wkv6) state — so nothing of the slot's previous
-    occupant survives admission.
-    """
-    return jax.tree.map(
-        lambda p, r: p.at[:, slot].set(r[:, 0].astype(p.dtype)), pool, row)
 
 
 def _is_kv_path(path) -> bool:
     return any(getattr(k, "key", None) == "kv" for k in path)
 
 
-def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
-    """Paged admission write: scatter the batch-1 prefill row into the
-    slot's physical blocks and its recurrent-state row.
+def write_slot(pool: dict, row: dict, slot, block_ids=None) -> dict:
+    """Admission write: land a batch-1 prefill cache in the pooled cache.
 
-    KV leaves: ``row`` is (n_units, 1, nb*block_size, KH, hd) — exactly
-    the prompt rounded up to whole blocks — and lands in pool blocks
-    ``block_ids`` ((nb,) int32), each overwritten *in full* (the rounding
-    padding is the prefill row's zeros, so no previous occupant's KV
-    survives in any prompt block).  Every other leaf is the dense
-    slot-row overwrite of :func:`write_slot`.
+    Dense (``block_ids=None``): every leaf is (n_units, B, ...) vs
+    (n_units, 1, ...); the whole slot row is replaced — including KV
+    positions beyond the new request's prompt and the recurrent (mamba /
+    wkv6) state — so nothing of the slot's previous occupant survives
+    admission.
+
+    Paged (``block_ids`` a (nb,) int32 array): KV leaves of ``row`` are
+    (n_units, 1, nb*block_size, KH, hd) — exactly the prompt rounded up
+    to whole blocks — and scatter into pool blocks ``block_ids``, each
+    overwritten *in full* (the rounding padding is the prefill row's
+    zeros, so no previous occupant's KV survives in any prompt block);
+    every other leaf takes the dense slot-row overwrite.
     """
+    if block_ids is None:
+        return jax.tree.map(
+            lambda p, r: p.at[:, slot].set(r[:, 0].astype(p.dtype)),
+            pool, row)
+
     nb = block_ids.shape[0]
 
     def one(path, p, r):
@@ -108,6 +107,30 @@ def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
         return p.at[:, slot].set(r[:, 0].astype(p.dtype))
 
     return jax.tree_util.tree_map_with_path(one, pool, row)
+
+
+def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
+    """Deprecated alias for ``write_slot(pool, row, slot, block_ids)``
+    — the dense and paged admission writes are one signature now."""
+    warnings.warn(
+        "write_slot_paged is deprecated; use "
+        "write_slot(pool, row, slot, block_ids=...)",
+        DeprecationWarning, stacklevel=2)
+    return write_slot(pool, row, slot, block_ids)
+
+
+def copy_block(pool: dict, src, dst) -> dict:
+    """Copy-on-write device kernel: duplicate physical KV block ``src``
+    into ``dst`` across every unit's K and V pool.  Issued by the engine
+    when a slot's write crosses into a block another reader still holds
+    (shared prefix divergence); non-KV leaves are untouched — recurrent
+    state is slot-dense and never shared."""
+    def one(path, p):
+        if _is_kv_path(path):
+            return p.at[:, dst].set(p[:, src])
+        return p
+
+    return jax.tree_util.tree_map_with_path(one, pool)
 
 
 def reset_slot_state(cache: dict, slot) -> dict:
@@ -130,7 +153,8 @@ class ServeEngine:
 
     Usage::
 
-        engine = ServeEngine(params, arch, max_batch=8, max_len=4096)
+        engine = ServeEngine(params, arch,
+                             ServeConfig(max_batch=8, max_len=4096))
         engine.warmup([64, 128])          # compile outside the timed path
         completions = engine.run(requests)
 
@@ -148,42 +172,65 @@ class ServeEngine:
     memory (admission then gates on the block budget and ``submit``
     raises :class:`PoolExhausted` for requests that can never fit).
 
-    ``prefill_chunk_tokens`` is the per-step prompt-token budget of the
-    mixed step: None (default) auto-sizes it (two KV blocks under paging,
-    256 otherwise), a positive value sets it explicitly, and 0 disables
-    chunking — admission then stalls the world on a batch-1 prefill (the
-    A/B oracle).  ``itl_samples`` records per-step wall seconds for every
-    step at whose *entry* at least one slot was mid-decode — under
-    stall-the-world admission the prefill stall lands in those samples,
-    which is exactly the tail the mixed step exists to flatten.
+    ``config.prefill_chunk_tokens`` is the per-step prompt-token budget
+    of the mixed step: None (default) auto-sizes it (two KV blocks under
+    paging, 256 otherwise), a positive value sets it explicitly, and 0
+    disables chunking — admission then stalls the world on a batch-1
+    prefill (the A/B oracle).  ``itl_samples`` records per-step wall
+    seconds for every step at whose *entry* at least one slot was
+    mid-decode — under stall-the-world admission the prefill stall lands
+    in those samples, which is exactly the tail the mixed step exists to
+    flatten.
+
+    ``config.prefix_cache`` (default True) shares identical whole prompt
+    blocks between requests through the refcounted copy-on-write prefix
+    index (:class:`repro.serve.PrefixCache`): a hit attaches the cached
+    blocks to the new slot, the mixed-step chunk starts at the first
+    uncached token, admission charges only the *new* blocks, and a write
+    into a still-shared block copies it first.  Requires the paged cache,
+    chunked prefill, and an attention-only arch (recurrent state cannot
+    skip prompt tokens) — anywhere else the knob is inert and serving is
+    byte-identical to sharing disabled.
     """
 
-    def __init__(self, params, arch: ArchConfig, *, max_batch: int,
-                 max_len: int, plan: ParallelPlan | ModelPlan | None = None,
-                 q_chunk: int = 256, kernel_backend: str | None = None,
-                 dtype=jnp.float32, policy: str = "continuous",
-                 kv_block_size: int | None = 128,
-                 kv_pool_blocks: int | None = None,
-                 prefill_chunk_tokens: int | None = None):
+    def __init__(self, params, arch: ArchConfig,
+                 config: ServeConfig | None = None, *,
+                 plan: ParallelPlan | ModelPlan | None = None, **legacy):
+        if config is None:
+            unknown = set(legacy) - set(LEGACY_KWARGS)
+            if unknown:
+                raise TypeError(f"ServeEngine got unexpected keyword "
+                                f"arguments {sorted(unknown)}")
+            warnings.warn(
+                "constructing ServeEngine from bare keyword arguments is "
+                "deprecated; pass a repro.serve.ServeConfig",
+                DeprecationWarning, stacklevel=2)
+            config = ServeConfig(**legacy)
+        elif legacy:
+            raise TypeError(
+                f"ServeEngine got both a ServeConfig and bare keyword "
+                f"arguments {sorted(legacy)}; move them into the config")
         if arch.enc_layers:
             raise NotImplementedError(
                 "ServeEngine covers decoder-only LMs; encoder-decoder "
                 "serving uses the static driver path")
         self.params = params
         self.arch = arch
-        self.max_batch = int(max_batch)
-        self.max_len = int(max_len)
-        self.dtype = dtype
+        self.config = config
+        self.max_batch = int(config.max_batch)
+        self.max_len = int(config.max_len)
+        self.dtype = config.dtype
+        dtype, policy = config.dtype, config.policy
         self._mod = model_module(arch)
         # paging only applies to dense-KV archs: a pure-recurrent stack
         # (e.g. RWKV) has no KV leaves to page.
         has_attn = any(spec.mixer == "attn" for spec in arch.pattern)
-        self.block_size = int(kv_block_size or 0) if has_attn else 0
+        self.block_size = int(config.kv_block_size or 0) if has_attn else 0
         self.paged = self.block_size > 0
-        if prefill_chunk_tokens is None:
+        if config.prefill_chunk_tokens is None:
             self.chunk = 2 * self.block_size if self.paged else 256
         else:
-            self.chunk = max(0, int(prefill_chunk_tokens))
+            self.chunk = max(0, int(config.prefill_chunk_tokens))
         self.chunk = min(self.chunk, self.max_len)
         self.chunked = self.chunk > 0
         # phase-aware: prefill runs under the plan's prefill phase, the
@@ -192,26 +239,37 @@ class ServeEngine:
         self.plan = plan
         self._decode_plan = as_model_plan(plan, arch, "decode")
         self._prefill, self._step = make_serve_fns(
-            arch, plan, q_chunk=q_chunk, kernel_backend=kernel_backend,
-            jit=True)
+            arch, plan, q_chunk=config.q_chunk,
+            kernel_backend=config.kernel_backend, jit=True)
+        self._write = jax.jit(write_slot, donate_argnums=(0,))
+        # prefix sharing is only sound where the prompt can actually be
+        # skipped: paged KV (blocks to point at), chunked prefill (the
+        # chunk starts at the first uncached token), and a stack whose
+        # per-token state is ALL in the KV blocks — any recurrent mixer
+        # (mamba / wkv6) must still ingest every prompt token.
+        attn_only = all(spec.mixer == "attn" for spec in arch.pattern)
+        use_prefix = (config.prefix_cache and self.paged and self.chunked
+                      and attn_only)
         if self.paged:
             pages = -(-self.max_len // self.block_size)
-            usable = (int(kv_pool_blocks) if kv_pool_blocks
+            usable = (int(config.kv_pool_blocks) if config.kv_pool_blocks
                       else self.max_batch * pages)
             self._alloc = BlockAllocator(usable + 1, self.block_size,
                                          self.max_batch, pages)
-            self._write = jax.jit(write_slot_paged, donate_argnums=(0,))
             self.cache = self._mod.init_paged_cache(
                 arch, usable + 1, self.block_size, self.max_batch, dtype)
             self.scheduler = SlotScheduler(
                 self.max_batch, policy, block_size=self.block_size,
-                total_blocks=usable, max_len=self.max_len)
+                total_blocks=usable, max_len=self.max_len,
+                pinned_blocks=lambda: self._alloc.pinned_shared)
         else:
             self._alloc = None
-            self._write = jax.jit(write_slot, donate_argnums=(0,))
             self.cache = self._mod.init_cache(arch, self.max_batch,
                                               self.max_len, dtype)
             self.scheduler = SlotScheduler(self.max_batch, policy)
+        self.prefix = (PrefixCache(self._alloc, evict=config.prefix_evict)
+                       if use_prefix else None)
+        self._cow = jax.jit(copy_block, donate_argnums=(0,))
         self._reset = jax.jit(reset_slot_state, donate_argnums=(0,))
         mesh = current_mesh()
         if mesh is not None:
@@ -251,6 +309,21 @@ class ServeEngine:
     def peak_blocks_in_use(self) -> int:
         return self._alloc.peak_in_use if self.paged else 0
 
+    @property
+    def prefix_hit_rate(self) -> float:
+        """Fraction of admitted requests whose prompt matched at least
+        one cached block (0.0 with prefix caching off or inert)."""
+        if self.prefix is None:
+            return 0.0
+        n = self.prefix.hits + self.prefix.misses
+        return self.prefix.hits / n if n else 0.0
+
+    @property
+    def prefill_tokens_saved(self) -> int:
+        """Prompt tokens served straight from shared blocks — never fed
+        through a prefill chunk."""
+        return self.prefix.tokens_saved if self.prefix is not None else 0
+
     def _prompt_row_len(self, prompt_len: int) -> int:
         """Length of the batch-1 prefill cache row: the prompt rounded up
         to whole blocks under paging (cheaper than the dense engine's
@@ -289,14 +362,25 @@ class ServeEngine:
         prompt lengths: 1 (pure decode) plus each chunk the budget policy
         will grant — whole budgets and per-prompt remainders.  The grant
         policy hands the full budget to one slot at a time, so this set
-        is exact and the jitted mixed step never compiles mid-trace."""
+        is exact and the jitted mixed step never compiles mid-trace.
+
+        With prefix caching a prompt may start mid-way — at any whole-
+        block boundary (that many leading blocks cached) or at ``plen -
+        1`` (fully cached prompt, one token recomputed for its logits) —
+        so the chunk sequence of every cached-start candidate is
+        enumerated too."""
         widths = {1}
         for plen in {int(p) for p in prompt_lens}:
-            r = plen
-            while r > 0:
-                g = min(r, self.chunk)
-                widths.add(g)
-                r -= g
+            starts = {0}
+            if self.prefix is not None:
+                starts.update(range(self.block_size, plen, self.block_size))
+                starts.add(plen - 1)
+            for start in starts:
+                r = plen - start
+                while r > 0:
+                    g = min(r, self.chunk)
+                    widths.add(g)
+                    r -= g
         return sorted(widths)
 
     def _sample(self, logits) -> np.ndarray:
@@ -331,6 +415,10 @@ class ServeEngine:
                     q_lens=jnp.asarray(q_lens), block_tables=bt)
                 self._sample(logits)
             self.cache = self._reset(self.cache, jnp.int32(0))
+            if self.prefix is not None:
+                # compile the COW block copy (trash -> trash: harmless)
+                self.cache = self._cow(self.cache, jnp.int32(0),
+                                       jnp.int32(0))
         else:
             for plen in sorted({int(p) for p in prompt_lens}):
                 row = self._mod.init_cache(self.arch, 1,
@@ -361,16 +449,82 @@ class ServeEngine:
         return dt
 
     # ---------------------------------------------------------------- #
-    def _admit_one(self) -> list[Completion]:
+    def _prefix_plan(self, req: Request):
+        """Admission plan for ``req`` against the prefix index *right
+        now*: ``(attach, cached_len, reserved, newly_pinned)``.
+
+        ``attach`` are the cached physical blocks the slot will point
+        its leading table pages at; ``cached_len`` the prompt tokens
+        those blocks already hold — capped at ``plen - 1`` so at least
+        one prompt token is always recomputed (its logits seed
+        generation; the resulting write into the last shared block is
+        the copy-on-write case).  ``reserved`` is the request's block
+        reservation: the worst case minus one block of credit per
+        attached block it will keep (the capped case re-allocates its
+        last block privately, so that one earns no credit).
+        ``newly_pinned`` counts attached blocks that currently have no
+        owner and no reader — admission must charge them, because the
+        attach turns them from evictable-retained into pinned."""
+        worst = self.scheduler.blocks_for(req)
+        if self.prefix is None:
+            return [], 0, worst, 0
+        plen = len(req.prompt)
+        matched = self.prefix.match(req.prompt)
+        bs = self.block_size
+        cached_len = min(len(matched) * bs, plen - 1)
+        n_attach = -(-cached_len // bs)
+        if n_attach == 0:
+            return [], 0, worst, 0
+        attach = matched[:n_attach]
+        capped = len(matched) * bs > cached_len
+        credit = n_attach - (1 if capped else 0)
+        pinned = sum(1 for b in attach if self._alloc.would_pin(b))
+        return attach, cached_len, worst - credit, pinned
+
+    def _admission_need(self, req: Request) -> int:
+        _, _, reserved, pinned = self._prefix_plan(req)
+        return reserved + pinned
+
+    def _admit_one(self) -> list[Completion] | None:
         req = self.queue.popleft()
         if self.chunked:
             # chunked admission is host-side only: the prompt rides later
             # mixed steps chunk by chunk; just claim the slot and scrub
             # its recurrent state (KV is masked, see reset_slot_state)
-            slot = self.scheduler.admit(req, chunked=True)
+            attach, cached_len, reserved, pinned = self._prefix_plan(req)
+            if (self.paged and
+                    reserved + pinned > self.scheduler.free_block_budget):
+                # the credit the admissibility scan saw went stale (an
+                # earlier admit in this wave evicted a matched block);
+                # requeue at the head and end the wave
+                self.queue.appendleft(req)
+                return None
+            slot = self.scheduler.admit(
+                req, chunked=True,
+                reserved=reserved if self.paged else None,
+                cached_len=cached_len)
+            if self.prefix is not None:
+                for page, block in enumerate(attach):
+                    self._alloc.attach(slot, page, block)
+                if cached_len:
+                    self.prefix.hits += 1
+                    self.prefix.tokens_saved += cached_len
+                else:
+                    self.prefix.misses += 1
+                # publish this prompt's remaining full blocks now, while
+                # the physical ids are cheap to pick (first writer wins;
+                # a same-wave duplicate stays private).  Publishing
+                # before the blocks are written is safe: prefill grants
+                # are oldest-first, so a later reader cannot execute a
+                # chunk that reads these blocks before this slot —
+                # strictly older — has prefilled its whole prompt.
+                for page in range(len(attach),
+                                  len(req.prompt) // self.block_size):
+                    block = self._alloc.alloc(slot, page)
+                    self.prefix.register(req.prompt, page, block)
             self.cache = self._reset(self.cache, jnp.int32(slot))
             self._tok[slot] = 0
-            self._pos[slot] = 0
+            self._pos[slot] = cached_len
             self.stats["admitted"] += 1
             return []
         slot = self.scheduler.admit(req)
@@ -443,10 +597,17 @@ class ServeEngine:
                 g = int(q_lens[slot])
                 if g > 0:
                     # bind every page this slot's writes touch this step
-                    # (draws from the slot's reservation, cannot fail)
+                    # (draws from the slot's reservation, cannot fail);
+                    # a write landing in a still-shared block comes back
+                    # as a (src, dst) pair — copy it on the device before
+                    # the step writes into the private twin
                     for page in range(st.pos // bs,
                                       (st.pos + g - 1) // bs + 1):
-                        self._alloc.ensure(slot, page * bs)
+                        cow = self._alloc.ensure(slot, page * bs)
+                        if cow is not None and cow[0] != cow[1]:
+                            self.cache = self._cow(self.cache,
+                                                   jnp.int32(cow[0]),
+                                                   jnp.int32(cow[1]))
         bt = jnp.asarray(self._alloc.tables) if self.paged else None
         logits, self.cache = self._step(
             self.params, jnp.asarray(toks), self.cache,
@@ -523,8 +684,13 @@ class ServeEngine:
         decoding_before = any(st.prefill_remaining == 0
                               for st in self.scheduler.active.values())
         done: list[Completion] = []
-        for _ in range(self.scheduler.admissible_requests(self.queue)):
-            done.extend(self._admit_one())
+        need_fn = self._admission_need if self.prefix is not None else None
+        for _ in range(self.scheduler.admissible_requests(self.queue,
+                                                          need_fn)):
+            admitted = self._admit_one()
+            if admitted is None:       # stale prefix credit: wave over
+                break
+            done.extend(admitted)
         active = self.scheduler.active
         if active:
             if self.chunked:

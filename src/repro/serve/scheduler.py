@@ -21,6 +21,20 @@ an empty free list mid-decode (its lazy allocations draw from its own
 reservation).  Reservations release on retire, so an EOS-at-short-length
 hands its unused budget straight back to the queue.
 
+**Prefix-cache credit** changes both sides of that ledger.  A request
+whose leading prompt blocks are already in the pool reserves only the
+blocks it will allocate *privately* (``admit(..., reserved=...)``, the
+worst case minus the cached-prefix credit) — that is the whole
+admission win: more concurrent requests fit because shared blocks are
+charged once.  In exchange the budget must also charge the shared
+blocks no reservation owns: ``pinned_blocks`` (wired to
+``BlockAllocator.pinned_shared``) counts blocks kept alive only by
+attached readers after their allocating owner retired, and
+``free_block_budget`` subtracts it.  Soundness invariant: ``pinned +
+sum(reservations) <= total_blocks`` — every private allocation draws
+from its own reservation, so the free list (with retained-only blocks
+evictable on demand) can never run dry mid-decode.
+
 Everything here is pure Python — no jax.  The device-side work (prefill,
 per-slot decode, slot writes) lives in :mod:`repro.serve.engine`.
 """
@@ -90,7 +104,7 @@ class SlotScheduler:
 
     def __init__(self, max_batch: int, policy: str = "continuous", *,
                  block_size: int = 0, total_blocks: int = 0,
-                 max_len: int = 0):
+                 max_len: int = 0, pinned_blocks=None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         if policy not in self.POLICIES:
@@ -101,6 +115,10 @@ class SlotScheduler:
         self.block_size = int(block_size)
         self.total_blocks = int(total_blocks)   # usable (trash excluded)
         self.max_len = int(max_len)
+        # shared prefix blocks alive with no owning reservation — charged
+        # against the budget; the engine wires this to the allocator's
+        # live ``pinned_shared`` count
+        self.pinned_blocks = pinned_blocks or (lambda: 0)
         self._slots: list[SlotState | None] = [None] * max_batch
         self._seq = 0                      # monotone admission counter
 
@@ -119,7 +137,8 @@ class SlotScheduler:
 
     @property
     def free_block_budget(self) -> int:
-        return self.total_blocks - self.reserved_blocks
+        return (self.total_blocks - self.reserved_blocks
+                - self.pinned_blocks())
 
     # ---------------------------------------------------------------- #
     @property
@@ -147,48 +166,61 @@ class SlotScheduler:
         # static: only form a fresh batch once the pool is fully drained
         return min(free, queued) if free == self.max_batch else 0
 
-    def admissible_requests(self, requests) -> int:
+    def admissible_requests(self, requests, need_fn=None) -> int:
         """How many of ``requests`` (the queue, FCFS order) may be
         admitted now: bounded by free slots and, under block accounting,
         by the unreserved block budget.  Admission stays in arrival
         order — the count stops at the first request that does not fit,
-        so a large request is never starved by later small ones."""
+        so a large request is never starved by later small ones.
+
+        ``need_fn(request) -> int`` overrides the worst-case
+        :meth:`blocks_for` charge; the prefix-caching engine passes its
+        effective need (worst case minus cached-prefix credit, plus the
+        matched blocks an admit would newly pin)."""
         limit = self.admissible(len(requests))
         if not self.block_size:
             return limit
+        need_fn = need_fn or self.blocks_for
         budget = self.free_block_budget
         n = 0
         for req in list(requests)[:limit]:
-            need = self.blocks_for(req)
+            need = need_fn(req)
             if need > budget:
                 break
             budget -= need
             n += 1
         return n
 
-    def admit(self, request: Request, *, chunked: bool = False) -> int:
+    def admit(self, request: Request, *, chunked: bool = False,
+              reserved: int | None = None, cached_len: int = 0) -> int:
         """Place ``request`` in the lowest free slot (reserving its block
         budget under block accounting); returns the slot.
 
         With ``chunked=True`` the prompt is NOT assumed prefilled: the
-        slot starts at ``pos=0`` with the whole prompt outstanding in
-        ``prefill_remaining``, to be fed through mixed steps chunk by
-        chunk (:meth:`prefill_grants`)."""
+        slot starts with the prompt outstanding in ``prefill_remaining``,
+        to be fed through mixed steps chunk by chunk
+        (:meth:`prefill_grants`).  ``cached_len`` prompt tokens already
+        sit in attached shared blocks (prefix-cache hit): the slot
+        starts at ``pos=cached_len`` and only prefills the rest.
+        ``reserved`` overrides the worst-case block reservation with the
+        request's *private* need (worst case minus cached credit)."""
         free = self.free_slots()
         if not free:
             raise RuntimeError("no free slot")
-        need = self.blocks_for(request)
+        need = self.blocks_for(request) if reserved is None else reserved
         if self.block_size and need > self.free_block_budget:
             raise RuntimeError(
                 f"request {request.uid} needs {need} blocks but only "
                 f"{self.free_block_budget} are unreserved")
         slot = free[0]
         plen = len(request.prompt)
+        if not chunked and cached_len:
+            raise ValueError("cached_len requires chunked admission")
         self._slots[slot] = SlotState(
             request=request,
-            pos=0 if chunked else plen,
+            pos=cached_len if chunked else plen,
             reserved_blocks=need,
-            prefill_remaining=plen if chunked else 0,
+            prefill_remaining=plen - cached_len if chunked else 0,
             seq=self._seq)
         self._seq += 1
         return slot

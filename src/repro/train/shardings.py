@@ -1,6 +1,9 @@
 """Deprecated location: the sharding realization moved to
 ``repro.plans.shardings`` (plans are a train *and* serve concern, not a
-train one).  This shim keeps old imports working."""
+train one).  Importing this module emits ``DeprecationWarning``; the
+symbols still resolve for one release."""
+
+import warnings
 
 from repro.plans.shardings import (  # noqa: F401
     batch_pspecs,
@@ -9,6 +12,11 @@ from repro.plans.shardings import (  # noqa: F401
     param_pspecs,
     to_shardings,
 )
+
+warnings.warn(
+    "repro.train.shardings is deprecated; import from "
+    "repro.plans.shardings",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["batch_pspecs", "cache_pspecs", "dominant_unit_plan",
            "param_pspecs", "to_shardings"]

@@ -29,7 +29,6 @@ from repro.models.arch import ArchConfig
 from repro.models.plan import ModelPlan
 from repro.optim import AdamWConfig, adamw_update
 from repro.plans.parallel_plan import ParallelPlan, as_model_plan
-from repro.serve.fns import make_serve_fns  # noqa: F401  (deprecated re-export)
 
 
 @dataclass(frozen=True)

@@ -171,12 +171,16 @@ def test_compare_bench_gate_logic():
     base = {"continuous_speedup": 1.34,
             "kv_reserved_frac": 0.33,
             "chunked_itl_p99_ratio": 0.55,
+            "prefix_hit_rate": 0.71,
+            "prefill_tokens_saved": 6144,
             "modes": {"continuous": {"kv_bytes_reserved": 1000,
                                      "itl_p99_ms": 40.0}}}
 
-    def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55):
+    def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55,
+            hit=0.71, saved=6144):
         return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
                 "chunked_itl_p99_ratio": ratio,
+                "prefix_hit_rate": hit, "prefill_tokens_saved": saved,
                 "modes": {"continuous": {"kv_bytes_reserved": kv,
                                          "itl_p99_ms": itl}}}
 
@@ -202,10 +206,27 @@ def test_compare_bench_gate_logic():
     # ...but growth past both the floor and the tolerance fails
     assert any("chunked_itl_p99_ratio" in f
                for f in compare(base, cur(ratio=1.2), 0.15))
+    # prefix_hit_rate is noise-floored at the 0.5 acceptance threshold:
+    # a >15% dip that stays at-or-above the floor is trace-composition
+    # drift, not a broken cache...
+    assert compare(base, cur(hit=0.55), 0.15) == []
+    # ...but a drop below both tolerance and floor means prompts stopped
+    # matching entirely
+    assert any("prefix_hit_rate" in f
+               for f in compare(base, cur(hit=0.30), 0.15))
+    # prefill_tokens_saved is deterministic for a fixed trace: strict
+    assert any("prefill_tokens_saved" in f
+               for f in compare(base, cur(saved=4000), 0.15))
+    assert compare(base, cur(saved=6000), 0.15) == []
     # a metric the baseline proves existed must not vanish silently
     gone = cur()
     del gone["kv_reserved_frac"]
     assert any("missing" in f for f in compare(base, gone, 0.15))
+    # ...including the prefix metrics (e.g. the cache silently disabled)
+    gone2 = cur()
+    del gone2["prefix_hit_rate"]
+    assert any("prefix_hit_rate" in f and "missing" in f
+               for f in compare(base, gone2, 0.15))
     # ...but a metric absent from the *baseline* is just new: skipped
     part = {"continuous_speedup": 1.3}
     assert compare(part, cur(), 0.15) == []

@@ -22,7 +22,7 @@ import pytest
 
 from repro import configs as C
 from repro.models import lm
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 # one arch per family on the serving path: dense GQA attention, MoE,
 # RWKV6 recurrence, Mamba-hybrid (mamba + attn + MoE interleave)
@@ -69,9 +69,9 @@ def _serve(params, arch, reqs, lens, *, max_len, chunk, kv_block_size,
            max_batch=2):
     """One engine pass with staggered admits and a mid-decode submit;
     returns {uid: (tokens, finish_reason)}."""
-    engine = ServeEngine(params, arch, max_batch=max_batch, max_len=max_len,
-                         kv_block_size=kv_block_size,
-                         prefill_chunk_tokens=chunk)
+    engine = ServeEngine(params, arch, ServeConfig(
+        max_batch=max_batch, max_len=max_len, kv_block_size=kv_block_size,
+        prefill_chunk_tokens=chunk))
     engine.warmup(lens)
     for r in reqs[:3]:
         engine.submit(r)

@@ -22,8 +22,8 @@ from repro import configs as C
 from repro.kernels import ops
 from repro.models import lm
 from repro.serve import (BlockAllocator, PoolExhausted, Request,
-                         ServeEngine, SlotScheduler, blocks_for_request,
-                         write_slot_paged)
+                         ServeConfig, ServeEngine, SlotScheduler,
+                         blocks_for_request, write_slot)
 
 # one arch per family on the serving path: dense GQA attention, MoE,
 # RWKV6 recurrence (no KV — paging must degrade to a no-op), Mamba-hybrid
@@ -81,11 +81,11 @@ def test_paged_matches_dense_engine(name):
     news = [6, 5, 7, 3, 5]
     prompts = _prompts(arch, lens)
 
-    dense = ServeEngine(params, arch, max_batch=2, max_len=max_len,
-                        kv_block_size=0)
+    dense = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=max_len, kv_block_size=0))
     # pick an EOS the dense engine produces mid-stream for request 2
-    free2 = _run(ServeEngine(params, arch, max_batch=1, max_len=max_len,
-                             kv_block_size=0),
+    free2 = _run(ServeEngine(params, arch, ServeConfig(
+                     max_batch=1, max_len=max_len, kv_block_size=0)),
                  [Request(uid=2, prompt=prompts[2], max_new_tokens=news[2])],
                  [lens[2]], stagger=False)[2][0]
     eos2 = next((t for i, t in enumerate(free2[1:], 1)
@@ -95,8 +95,8 @@ def test_paged_matches_dense_engine(name):
                     eos_id=eos[i]) for i in range(5)]
     want = _run(dense, reqs, lens)
 
-    paged = ServeEngine(params, arch, max_batch=2, max_len=max_len,
-                        kv_block_size=BS)
+    paged = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=max_len, kv_block_size=BS))
     got = _run(paged, reqs, lens)
     assert got == want
     if eos2 is not None:
@@ -108,13 +108,15 @@ def test_paged_matches_dense_engine(name):
 
 
 def test_block_free_list_restored_after_retires():
-    """Retire N requests through a small slot pool: every block returns
-    to the free list and every table row points back at the trash
-    block — a leak here would strangle a long-running server."""
+    """Retire N requests through a small slot pool: every block is
+    accounted for — back on the free list, or (default "lru" prefix
+    retention) held by the prefix index and returned in full by
+    ``flush()`` — and every table row points back at the trash block.
+    A leak here would strangle a long-running server."""
     arch = _arch("llama3_2_1b")
     params = _params(arch)
-    engine = ServeEngine(params, arch, max_batch=2, max_len=20,
-                         kv_block_size=BS)
+    engine = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=20, kv_block_size=BS))
     lens = [3, 7, 5, 9, 4, 6]
     prompts = _prompts(arch, lens, seed=5)
     reqs = [Request(uid=i, prompt=p, max_new_tokens=4)
@@ -123,10 +125,16 @@ def test_block_free_list_restored_after_retires():
     done = engine.run(reqs)
     assert len(done) == len(reqs)
     alloc = engine._alloc
-    assert alloc.free_blocks == alloc.num_blocks - 1     # all but trash
+    usable = alloc.num_blocks - 1
+    # retained prompt blocks are not leaked: the index owns them and
+    # hands every one back on flush
+    retained = engine.prefix.flush()
+    assert retained > 0                        # prompts published blocks
+    assert alloc.free_blocks == usable
     assert (alloc.tables == 0).all()
     assert alloc.peak_in_use > 0
     assert engine.scheduler.reserved_blocks == 0
+    assert alloc.pinned_shared == 0
 
 
 def test_submit_truncates_instead_of_rejecting_and_raises_pool_exhausted():
@@ -142,8 +150,8 @@ def test_submit_truncates_instead_of_rejecting_and_raises_pool_exhausted():
 
     outs = {}
     for bs in (0, BS):
-        engine = ServeEngine(params, arch, max_batch=1, max_len=max_len,
-                             kv_block_size=bs)
+        engine = ServeEngine(params, arch, ServeConfig(
+            max_batch=1, max_len=max_len, kv_block_size=bs))
         engine.warmup([8])
         # prompt 8 + max_new 99 >> max_len 10: admitted, truncated
         (c,) = engine.run([Request(uid=0, prompt=p8, max_new_tokens=99)])
@@ -156,8 +164,8 @@ def test_submit_truncates_instead_of_rejecting_and_raises_pool_exhausted():
     assert outs[0] == outs[BS]
 
     # a pool too small for the request's worst case can never serve it
-    small = ServeEngine(params, arch, max_batch=1, max_len=max_len,
-                        kv_block_size=BS, kv_pool_blocks=1)
+    small = ServeEngine(params, arch, ServeConfig(
+        max_batch=1, max_len=max_len, kv_block_size=BS, kv_pool_blocks=1))
     with pytest.raises(PoolExhausted, match="KV blocks worst-case"):
         small.submit(Request(uid=2, prompt=p8, max_new_tokens=99))
 
@@ -193,9 +201,12 @@ def test_scheduler_admits_on_blocks_not_slots():
 def test_block_allocator_lazy_alloc_and_trash_block():
     alloc = BlockAllocator(6, 4, max_batch=2, pages_per_slot=4)
     assert alloc.free_blocks == 5 and alloc.blocks_in_use == 0
-    assert alloc.ensure(0, 0) is True                 # page 0 bound
-    assert alloc.ensure(0, 3) is False                # same page (pos 3)
-    assert alloc.ensure(0, 4) is True                 # boundary crossing
+    alloc.ensure(0, 0)                                # page 0 bound
+    assert alloc.blocks_in_use == 1
+    assert alloc.ensure(0, 3) is None                 # same page (pos 3)
+    assert alloc.blocks_in_use == 1
+    alloc.ensure(0, 4)                                # boundary crossing
+    assert alloc.blocks_in_use == 2
     assert alloc.tables[0, 0] != 0 and alloc.tables[0, 1] != 0
     assert (alloc.tables[1] == 0).all()               # other slot: trash
     with pytest.raises(ValueError):
@@ -210,14 +221,15 @@ def test_block_allocator_lazy_alloc_and_trash_block():
 def test_write_slot_paged_overwrites_prompt_blocks_and_state_row():
     """Admission must fully overwrite every prompt block and the slot's
     recurrent-state row, and touch nothing else — the paged analogue of
-    the dense full-row-overwrite hygiene guarantee."""
+    the dense full-row-overwrite hygiene guarantee (one unified
+    ``write_slot`` signature: ``block_ids`` switches the KV layout)."""
     arch = _arch("jamba_1_5_large")          # kv + conv/ssm state leaves
     nb, bs = 2, 4
     pool = jax.tree.map(lambda a: jnp.full_like(a, 7.0),
                         lm.init_paged_cache(arch, 6, bs, 3, jnp.float32))
     row = lm.init_cache(arch, 1, nb * bs, jnp.float32)
     ids = jnp.asarray([2, 5], jnp.int32)
-    out = write_slot_paged(pool, row, 1, ids)
+    out = write_slot(pool, row, 1, block_ids=ids)
     flat_out = jax.tree_util.tree_flatten_with_path(out)[0]
     flat_row = jax.tree.leaves(row)
     assert len(flat_out) == len(flat_row)
@@ -289,7 +301,7 @@ from repro.core import AxisSpec, ICI_BW, MeshSpec
 from repro.core.sharding import use_mesh
 from repro.models import lm
 from repro.plans import build_parallel_plan
-from repro.serve import Request, ServeEngine
+from repro.serve import Request, ServeConfig, ServeEngine
 
 arch = C.reduced("llama3_2_1b")
 mesh_spec = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
@@ -308,16 +320,17 @@ reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=4)
         for i in range(len(lens))]
 
 # dense single-device oracle
-oracle = ServeEngine(params, arch, max_batch=4, max_len=max_len,
-                     kv_block_size=0)
+oracle = ServeEngine(params, arch, ServeConfig(max_batch=4, max_len=max_len,
+                                               kv_block_size=0))
 oracle.warmup(sorted(set(lens)))
 want = {c.uid: c.tokens for c in oracle.run(reqs)}
 
 # paged engine under the searched decode plan on the real 8-device mesh
 mesh = compat.make_mesh((4, 2), ("data", "model"))
 with use_mesh(mesh):
-    engine = ServeEngine(params, arch, max_batch=4, max_len=max_len,
-                         plan=pp, kv_block_size=4)
+    engine = ServeEngine(params, arch,
+                         ServeConfig(max_batch=4, max_len=max_len,
+                                     kv_block_size=4), plan=pp)
     engine.warmup(sorted(set(lens)))
     got = {c.uid: c.tokens for c in engine.run(reqs)}
 assert engine.paged, "paged engine expected"

@@ -158,16 +158,44 @@ def test_uniform_parallel_plan_matches_model_plan():
     assert pp.strategy_name == "uniform"
 
 
-def test_deprecated_aliases_still_resolve():
-    """PR contract: existing imports keep working after the relocation of
-    shardings into repro.plans and make_serve_fns into repro.serve."""
+def test_deprecated_aliases_warn_and_still_resolve():
+    """PR contract: existing imports keep working for one release after
+    the relocation of shardings into repro.plans and make_serve_fns into
+    repro.serve — but every access through the old ``repro.train`` paths
+    announces itself with a DeprecationWarning."""
+    import importlib
+    import sys
+    import warnings
+
     import repro.plans as plans
     import repro.serve as serve
     import repro.train as train
-    import repro.train.shardings as old_shardings
 
-    assert train.make_serve_fns is serve.make_serve_fns
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert train.make_serve_fns is serve.make_serve_fns
+        for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
+                     "dominant_unit_plan", "to_shardings"):
+            assert getattr(train, name) is getattr(plans, name)
+    assert len(w) == 6
+    assert all(issubclass(x.category, DeprecationWarning) for x in w)
+    assert "repro.serve.fns" in str(w[0].message)
+
+    # the module-shim form: importing repro.train.shardings itself warns
+    sys.modules.pop("repro.train.shardings", None)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old_shardings = importlib.import_module("repro.train.shardings")
+    assert any(issubclass(x.category, DeprecationWarning) and
+               "repro.plans.shardings" in str(x.message) for x in w)
     for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
                  "dominant_unit_plan", "to_shardings"):
-        assert getattr(train, name) is getattr(plans, name)
         assert getattr(old_shardings, name) is getattr(plans, name)
+
+    # canonical access paths stay silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert train.TrainConfig is not None
+        assert train.make_train_step is not None
+        assert serve.make_serve_fns is not None
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]

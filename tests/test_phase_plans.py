@@ -77,7 +77,7 @@ def test_engine_accepts_parallel_plan_single_device():
 
     from repro.models import lm, uniform_plan
     from repro.plans import ParallelPlan
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     arch = C.reduced("llama3_2_1b")
     params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
@@ -89,8 +89,8 @@ def test_engine_accepts_parallel_plan_single_device():
 
     outs = []
     for plan in (uniform_plan(arch), ParallelPlan.uniform(arch)):
-        engine = ServeEngine(params, arch, max_batch=2, max_len=16,
-                             plan=plan)
+        engine = ServeEngine(params, arch,
+                             ServeConfig(max_batch=2, max_len=16), plan=plan)
         engine.warmup([len(p) for p in prompts])
         outs.append({c.uid: c.tokens for c in engine.run(reqs)})
     assert outs[0] == outs[1]
@@ -109,7 +109,7 @@ ACCEPTANCE = textwrap.dedent("""
     from repro.core.sharding import use_mesh
     from repro.models import lm
     from repro.plans import ParallelPlan, build_parallel_plan
-    from repro.serve import Request, ServeEngine
+    from repro.serve import Request, ServeConfig, ServeEngine
 
     arch = C.reduced("llama3_2_1b")
     mesh_spec = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
@@ -141,14 +141,16 @@ ACCEPTANCE = textwrap.dedent("""
             for i in range(len(lens))]
 
     # uniform-plan oracle: no mesh, replicated execution
-    oracle = ServeEngine(params, arch, max_batch=4, max_len=max_len)
+    oracle = ServeEngine(params, arch,
+                         ServeConfig(max_batch=4, max_len=max_len))
     oracle.warmup(sorted(set(lens)))
     want = {c.uid: c.tokens for c in oracle.run(reqs)}
 
     # searched plan, loaded from JSON, on the real 8-device mesh
     mesh = compat.make_mesh((4, 2), ("data", "model"))
     with use_mesh(mesh):
-        engine = ServeEngine(params, arch, max_batch=4, max_len=max_len,
+        engine = ServeEngine(params, arch,
+                             ServeConfig(max_batch=4, max_len=max_len),
                              plan=loaded)
         engine.warmup(sorted(set(lens)))
         got = {c.uid: c.tokens for c in engine.run(reqs)}

@@ -1,0 +1,391 @@
+"""Copy-on-write prefix caching: sharing must be a pure *memory*
+optimization — token-for-token identical to the sharing-disabled oracle
+on the same requests — under both eviction policies, across the
+dense-attention family it serves and the hybrid family where it must
+gate itself off (a recurrent mixer still has to ingest every prompt
+token, so skipping cached blocks would corrupt its state).
+
+White-box coverage: the allocator's attach/refcount/COW state machine
+(owner-always-writable, reader-COWs, degenerate src==dst re-alloc),
+pinned-shared accounting, the PrefixCache chained-hash index
+(first-writer-wins, leaf-first LRU eviction, on-demand eviction when
+the pool runs dry, entry teardown when blocks free under
+``evict="none"``), the scheduler's prefix-credit reservations, and the
+ServeConfig legacy-kwarg shim.
+"""
+
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as C
+from repro.models import lm
+from repro.serve import (BlockAllocator, PrefixCache, Request, ServeConfig,
+                         ServeEngine, SlotScheduler)
+
+BS = 4                      # tiny blocks: every prompt crosses pages
+
+
+def _arch(name):
+    arch = C.reduced(name)
+    if arch.n_experts:
+        arch = dataclasses.replace(arch, capacity_factor=8.0)
+    return arch
+
+
+def _params(arch):
+    return lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+
+
+def _tokens(arch, n, seed):
+    rng = np.random.default_rng(seed)
+    return tuple(int(t) for t in rng.integers(1, arch.vocab, n))
+
+
+def _shared_requests(arch):
+    """Five requests over one 8-token (2-block) shared prefix: tails of
+    3/5/1 tokens, the bare block-aligned prefix itself (the capped COW
+    case), and one unrelated prompt."""
+    shared = _tokens(arch, 8, seed=1)
+    return [
+        Request(uid=0, prompt=shared + _tokens(arch, 3, 2), max_new_tokens=5),
+        Request(uid=1, prompt=shared + _tokens(arch, 5, 3), max_new_tokens=4),
+        Request(uid=2, prompt=shared, max_new_tokens=6),
+        Request(uid=3, prompt=_tokens(arch, 7, 4), max_new_tokens=3),
+        Request(uid=4, prompt=shared + _tokens(arch, 1, 5), max_new_tokens=4),
+    ]
+
+
+def _run(engine, reqs, *, stagger=True):
+    engine.warmup(sorted({len(r.prompt) for r in reqs}))
+    got = []
+    if stagger:
+        for r in reqs[:3]:
+            engine.submit(r)
+        for _ in range(2):             # run a few steps mid-stream...
+            got.extend(engine.step())
+        for r in reqs[3:]:             # ...then submit more mid-decode
+            engine.submit(r)
+    else:
+        for r in reqs:
+            engine.submit(r)
+    while engine.busy:
+        got.extend(engine.step())
+    return {c.uid: (c.tokens, c.finish_reason) for c in got}
+
+
+# ------------------------------------------------------------------ #
+# oracle identity
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("name,evict", [
+    ("llama3_2_1b", "lru"),        # dense attention: sharing active
+    ("llama3_2_1b", "none"),       # concurrent-only sharing
+    ("jamba_1_5_large", "lru"),    # hybrid: cache must gate itself off
+])
+def test_prefix_sharing_matches_no_sharing_oracle(name, evict):
+    """Staggered admits over a shared system prompt: the prefix-cached
+    engine must complete every request exactly like the same engine with
+    sharing disabled — and actually share on the attn-only arch."""
+    arch = _arch(name)
+    params = _params(arch)
+    reqs = _shared_requests(arch)
+
+    def cfg(prefix):
+        return ServeConfig(max_batch=2, max_len=24, kv_block_size=BS,
+                           prefix_cache=prefix, prefix_evict=evict)
+
+    want = _run(ServeEngine(params, arch, cfg(False)), reqs)
+    engine = ServeEngine(params, arch, cfg(True))
+    got = _run(engine, reqs)
+    assert got == want
+
+    attn_only = all(spec.mixer == "attn" for spec in arch.pattern)
+    if attn_only:
+        assert engine.prefix is not None
+        assert engine.prefix_hit_rate > 0
+        assert engine.prefill_tokens_saved > 0
+    else:
+        # recurrent mixers in the stack: the prefix cache must be inert
+        assert engine.prefix is None
+        assert engine.prefix_hit_rate == 0.0
+        assert engine.prefill_tokens_saved == 0
+
+
+def test_cow_divergence_mid_block():
+    """A block-aligned, fully-matched prompt is the genuine COW case:
+    the last cached token is recomputed (its logits seed generation) and
+    its write lands inside a shared block — the reader must re-point to
+    a private copy while the publisher's block survives untouched."""
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    engine = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=24, kv_block_size=BS))
+    publisher = Request(uid=0, prompt=_tokens(arch, 12, 1),
+                        max_new_tokens=8)
+    reader = Request(uid=1, prompt=publisher.prompt[:8], max_new_tokens=4)
+    engine.warmup([8, 12])
+
+    engine.submit(publisher)
+    engine.step()                      # admission happens inside step()
+    while engine.scheduler.state(0).prefill_remaining:
+        engine.step()
+    engine.submit(reader)
+    for _ in range(3):
+        engine.step()
+        if (1 in engine.scheduler.active
+                and not engine.scheduler.state(1).prefill_remaining):
+            break
+    alloc = engine._alloc
+    # cached_len = plen - 1 = 7: both full blocks attached, one token
+    # recomputed, and the write at pos 7 triggered the copy-on-write
+    assert engine.prefix.tokens_saved == 7
+    t0, t1 = alloc.tables[0], alloc.tables[1]
+    assert t0[0] and t0[0] == t1[0], "first shared block stays shared"
+    assert t1[1] and t0[1] and t1[1] != t0[1], "diverged block COWed"
+    assert alloc.refcount(int(t0[0])) >= 2
+    while engine.busy:
+        engine.step()
+
+
+@pytest.mark.parametrize("evict", PrefixCache.EVICTION)
+def test_free_list_restored_after_retires(evict):
+    """Every block is accounted for after all retires: "none" restores
+    the free list by itself; "lru" holds published blocks through the
+    index's retention reference until ``flush()`` hands them all back."""
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    engine = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=24, kv_block_size=BS, prefix_evict=evict))
+    # same-wave identical prompts: hits occur even under concurrent-only
+    _run(engine, _shared_requests(arch), stagger=False)
+    assert engine.prefix.hits > 0
+
+    alloc = engine._alloc
+    usable = alloc.num_blocks - 1
+    assert (alloc.tables == 0).all(), "every row points at trash again"
+    if evict == "none":
+        assert alloc.free_blocks == usable
+        assert engine.prefix.cached_blocks == 0
+    else:
+        retained = engine.prefix.flush()
+        assert retained > 0
+        assert alloc.free_blocks == usable
+    assert alloc.pinned_shared == 0
+
+
+# ------------------------------------------------------------------ #
+# allocator state machine
+# ------------------------------------------------------------------ #
+def test_allocator_attach_refcount_and_cow():
+    a = BlockAllocator(8, BS, max_batch=3, pages_per_slot=4)
+    b0 = a.alloc(0, 0)
+    assert a.refcount(b0) == 1
+    a.attach(1, 0, b0)
+    assert a.refcount(b0) == 2
+    with pytest.raises(ValueError):
+        a.attach(1, 0, b0)             # page already mapped
+    with pytest.raises(ValueError):
+        a.attach(2, 0, 5)              # unreferenced block
+
+    # the owner writes its own block freely, readers attached or not
+    assert a.ensure(0, 3) is None
+    assert a.refcount(b0) == 2
+    # a reader writing into the shared block must COW
+    cow = a.ensure(1, 2)
+    assert cow is not None and cow[0] == b0 and cow[1] != b0
+    assert a.refcount(b0) == 1 and int(a.tables[1, 0]) == cow[1]
+    # unmapped page: plain lazy allocation, nothing to copy
+    assert a.ensure(1, BS) is None
+    assert a.free_slot(0) == 1
+    assert a.free_slot(1) == 2
+    assert a.free_blocks == 7 and a.pinned_shared == 0
+    assert (a.tables == 0).all()
+
+
+def test_allocator_cow_degenerate_realloc():
+    """Last reader COWs a block whose owner is gone: the release frees
+    it and the LIFO free list hands the same block straight back —
+    ensure() reports src == dst so the engine can skip the device copy."""
+    a = BlockAllocator(2, BS, max_batch=2, pages_per_slot=2)
+    b = a.alloc(0, 0)
+    a.attach(1, 0, b)
+    a.free_slot(0)                     # owner gone; reader keeps b alive
+    assert a.pinned_shared == 1
+    assert a.ensure(1, 0) == (b, b)
+    assert a.refcount(b) == 1 and a.pinned_shared == 0
+
+
+def test_allocator_pinned_shared_accounting():
+    a = BlockAllocator(6, BS, max_batch=2, pages_per_slot=4)
+    b = a.alloc(0, 0)
+    a.retain(b)
+    assert a.pinned_shared == 0        # owner alive: reservation pays
+    a.free_slot(0)
+    # retained-only: soft-free (evictable), would pin if attached
+    assert a.pinned_shared == 0 and a.evictable(b) and a.would_pin(b)
+    a.attach(1, 0, b)
+    assert a.pinned_shared == 1
+    assert not a.evictable(b) and not a.would_pin(b)
+    a.free_slot(1)
+    assert a.pinned_shared == 0
+    a.release_retained(b)
+    assert a.free_blocks == 5
+
+
+# ------------------------------------------------------------------ #
+# the content-addressed index
+# ------------------------------------------------------------------ #
+def test_prefix_cache_chained_match_and_first_writer_wins():
+    a = BlockAllocator(10, BS, max_batch=2, pages_per_slot=8)
+    pc = PrefixCache(a, evict="lru")
+    p = tuple(range(1, 11))            # 10 tokens -> 2 full blocks
+    assert pc.chain_hashes(p) == pc.chain_hashes(p[:8])
+    assert pc.match(p) == []
+
+    b0, b1 = a.alloc(0, 0), a.alloc(0, 1)
+    assert pc.register(p, 0, b0) and pc.register(p, 1, b1)
+    assert pc.match(p) == [b0, b1]
+    # a diverging prompt matches only the shared leading run
+    assert pc.match(p[:BS] + tuple(range(50, 60))) == [b0]
+    # chained hashes carry depth: p's second block as a *first* block
+    # of another prompt must not match
+    assert pc.match(p[BS:2 * BS] + p[:BS]) == []
+    # first writer wins: a concurrent duplicate stays private
+    b2 = a.alloc(1, 0)
+    assert not pc.register(p, 0, b2)
+    assert pc.match(p)[0] == b0
+
+
+def test_prefix_cache_lru_evicts_leaf_first_and_on_demand():
+    a = BlockAllocator(4, BS, max_batch=2, pages_per_slot=4)  # 3 usable
+    pc = PrefixCache(a, evict="lru")
+    p = tuple(range(1, 13))            # 3 full blocks
+    blocks = [a.alloc(0, i) for i in range(3)]
+    for page, b in enumerate(blocks):
+        pc.register(p, page, b)
+    a.free_slot(0)                     # whole chain now retained-only
+
+    # interior blocks have children: explicit evict must take the leaf
+    assert pc.evict(1) == 1
+    assert pc.match(p) == blocks[:2]
+    # pool-dry allocation evicts on demand through the allocator hook
+    c0 = a.alloc(1, 0)                 # consumes the freed block
+    c1 = a.alloc(1, 1)                 # dry pool -> evicts the new leaf
+    assert c0 and c1
+    assert pc.match(p) == blocks[:1]
+    assert pc.evicted == 2
+
+
+def test_prefix_cache_none_policy_drops_freed_chains():
+    """Under ``evict="none"`` the index holds no references: when a
+    mid-chain block leaves the pool, its entry and every now-unreachable
+    descendant entry must go — even descendants whose blocks live on."""
+    a = BlockAllocator(8, BS, max_batch=2, pages_per_slot=4)
+    pc = PrefixCache(a, evict="none")
+    p = tuple(range(1, 13))
+    b0 = a.alloc(0, 0)
+    b1 = a.alloc(1, 0)                 # page-1 block owned by another slot
+    pc.register(p, 0, b0)
+    pc.register(p, 1, b1)
+    assert pc.match(p) == [b0, b1]
+
+    a.free_slot(0)                     # frees b0; b1 is still alive
+    assert pc.match(p) == [] and pc.cached_blocks == 0
+    a.free_slot(1)
+    assert a.free_blocks == 7
+
+
+def test_prefix_cache_rejects_unknown_policy():
+    a = BlockAllocator(4, BS, max_batch=1, pages_per_slot=2)
+    with pytest.raises(ValueError):
+        PrefixCache(a, evict="fifo")
+
+
+# ------------------------------------------------------------------ #
+# scheduler credit ledger
+# ------------------------------------------------------------------ #
+def test_scheduler_prefix_credit_and_pinned_budget():
+    pinned = {"n": 0}
+    s = SlotScheduler(2, "continuous", block_size=BS, total_blocks=8,
+                      max_len=32, pinned_blocks=lambda: pinned["n"])
+    r = Request(uid=0, prompt=tuple(range(1, 11)), max_new_tokens=4)
+    assert s.blocks_for(r) == 4        # worst case: 13 tokens -> 4 blocks
+    assert s.free_block_budget == 8
+    pinned["n"] = 3                    # shared blocks nobody reserves
+    assert s.free_block_budget == 5
+
+    # prefix credit: reserve only the private need, start past the
+    # cached prefix with just the tail outstanding
+    slot = s.admit(r, chunked=True, reserved=2, cached_len=7)
+    st = s.state(slot)
+    assert st.pos == 7 and st.prefill_remaining == 3
+    assert st.reserved_blocks == 2 and s.free_block_budget == 3
+
+    with pytest.raises(ValueError):
+        s.admit(Request(uid=1, prompt=(1, 2, 3), max_new_tokens=2),
+                cached_len=2)          # cached_len requires chunked
+    # admissibility honors the caller's effective-need function
+    q = [Request(uid=2, prompt=tuple(range(1, 9)), max_new_tokens=4)]
+    assert s.admissible_requests(q, need_fn=lambda _: 99) == 0
+    assert s.admissible_requests(q, need_fn=lambda _: 1) == 1
+
+
+# ------------------------------------------------------------------ #
+# ServeConfig surface
+# ------------------------------------------------------------------ #
+def test_serve_config_validates_and_replaces():
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=1, max_len=8, policy="bogus")
+    with pytest.raises(ValueError):
+        ServeConfig(max_batch=1, max_len=8, prefix_evict="bogus")
+    cfg = ServeConfig(max_batch=2, max_len=16, kv_block_size=BS)
+    assert cfg.replace(kv_block_size=0).kv_block_size == 0
+    assert cfg.kv_block_size == BS     # frozen: replace copies
+
+
+def test_serve_engine_legacy_kwargs_warn_and_match_config():
+    arch = _arch("llama3_2_1b")
+    params = _params(arch)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        engine = ServeEngine(params, arch, max_batch=1, max_len=8,
+                             kv_block_size=BS)
+    assert any(issubclass(x.category, DeprecationWarning)
+               and "ServeConfig" in str(x.message) for x in w)
+    assert engine.config == ServeConfig(max_batch=1, max_len=8,
+                                        kv_block_size=BS)
+    # mixing the two forms, or inventing knobs, is an error not a warning
+    with pytest.raises(TypeError):
+        ServeEngine(params, arch, ServeConfig(max_batch=1, max_len=8),
+                    max_batch=2)
+    with pytest.raises(TypeError):
+        ServeEngine(params, arch, block_sise=BS)
+
+    # the config path stays silent
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        ServeEngine(params, arch, ServeConfig(max_batch=1, max_len=8,
+                                              kv_block_size=BS))
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+def test_write_slot_paged_is_deprecated_alias():
+    from repro.serve import write_slot, write_slot_paged
+
+    arch = _arch("llama3_2_1b")
+    pool = lm.init_paged_cache(arch, 4, BS, 2, jnp.float32)
+    row = lm.init_cache(arch, 1, BS, jnp.float32)
+    ids = jnp.asarray([1], jnp.int32)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        legacy = write_slot_paged(pool, row, 1, ids)
+    assert any(issubclass(x.category, DeprecationWarning)
+               and "write_slot" in str(x.message) for x in w)
+    pool2 = lm.init_paged_cache(arch, 4, BS, 2, jnp.float32)
+    unified = write_slot(pool2, row, 1, block_ids=ids)
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(unified)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -18,7 +18,8 @@ import pytest
 
 from repro import configs as C
 from repro.models import lm
-from repro.serve import Request, ServeEngine, SlotScheduler, write_slot
+from repro.serve import (Request, ServeConfig, ServeEngine, SlotScheduler,
+                         write_slot)
 
 # one arch per family on the serving path: dense GQA attention, MoE,
 # RWKV6 recurrence, Mamba-hybrid (mamba + attn + MoE interleave)
@@ -84,7 +85,8 @@ def test_continuous_matches_per_request_oracle(name):
     if eos2 is not None:
         assert want[2][-1] == eos2 and len(want[2]) < len(free2) + 1
 
-    engine = ServeEngine(params, arch, max_batch=2, max_len=max_len)
+    engine = ServeEngine(params, arch,
+                         ServeConfig(max_batch=2, max_len=max_len))
     engine.warmup(lens)
     reqs = [Request(uid=i, prompt=prompts[i], max_new_tokens=news[i],
                     eos_id=eos[i]) for i in range(5)]
@@ -123,8 +125,8 @@ def test_static_policy_matches_oracle_with_fewer_steps_than_lockstep():
 
     steps = {}
     for policy in ("continuous", "static"):
-        engine = ServeEngine(params, arch, max_batch=2, max_len=max_len,
-                             policy=policy)
+        engine = ServeEngine(params, arch, ServeConfig(
+            max_batch=2, max_len=max_len, policy=policy))
         engine.warmup(lens)
         got = engine.run(reqs)
         assert {c.uid: c.tokens for c in got} == want, policy
@@ -143,7 +145,8 @@ def test_slot_reuse_cannot_leak_state(name):
     pa, pb = _prompts(arch, [8, 8], seed=3)
     want_b = _oracle(params, arch, pb, 5, max_len)
 
-    engine = ServeEngine(params, arch, max_batch=1, max_len=max_len)
+    engine = ServeEngine(params, arch,
+                         ServeConfig(max_batch=1, max_len=max_len))
     engine.warmup([8])
     got = engine.run([Request(uid=0, prompt=pa, max_new_tokens=7),
                       Request(uid=1, prompt=pb, max_new_tokens=5)])
@@ -257,9 +260,9 @@ def test_warmup_compiles_every_mixed_step_bucket(kv_block_size):
     max_len = 24
     lens = [5, 9, 3]
     prompts = _prompts(arch, lens, seed=4)
-    engine = ServeEngine(params, arch, max_batch=2, max_len=max_len,
-                         kv_block_size=kv_block_size,
-                         prefill_chunk_tokens=4)
+    engine = ServeEngine(params, arch, ServeConfig(
+        max_batch=2, max_len=max_len, kv_block_size=kv_block_size,
+        prefill_chunk_tokens=4))
     engine.warmup(lens)
     compiled = engine._step._cache_size()
     got = engine.run([Request(uid=i, prompt=prompts[i], max_new_tokens=4)
@@ -273,7 +276,7 @@ def test_warmup_compiles_every_mixed_step_bucket(kv_block_size):
 def test_engine_rejects_oversized_and_encdec():
     arch = _arch("llama3_2_1b")
     params = _params(arch)
-    engine = ServeEngine(params, arch, max_batch=1, max_len=8)
+    engine = ServeEngine(params, arch, ServeConfig(max_batch=1, max_len=8))
     # only a prompt that cannot fit at all is refused; prompt + max_new
     # beyond max_len is served and truncated at the row budget (EOS
     # usually lands earlier — see test_paged_cache for the semantics)
@@ -281,4 +284,5 @@ def test_engine_rejects_oversized_and_encdec():
         engine.submit(Request(uid=0, prompt=(1,) * 9, max_new_tokens=1))
     engine.submit(Request(uid=1, prompt=(1,) * 6, max_new_tokens=4))
     with pytest.raises(NotImplementedError):
-        ServeEngine({}, C.reduced("seamless_m4t_v2"), max_batch=1, max_len=8)
+        ServeEngine({}, C.reduced("seamless_m4t_v2"),
+                    ServeConfig(max_batch=1, max_len=8))

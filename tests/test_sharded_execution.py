@@ -26,8 +26,8 @@ SCRIPT = textwrap.dedent("""
     from repro.models.arch import ShapeSpec
     from repro.models.graph_export import export_graph
     from repro.optim import adamw_init
-    from repro.train import (TrainConfig, batch_pspecs, make_train_step,
-                             param_pspecs, to_shardings)
+    from repro.plans import batch_pspecs, param_pspecs, to_shardings
+    from repro.train import TrainConfig, make_train_step
 
     arch = C.reduced("olmoe_1b_7b")      # MoE: exercises EP + dispatch
     shape = ShapeSpec("t", 64, 8, "train")
