@@ -28,7 +28,14 @@ fails when a watched metric regresses by more than ``--max-regression``:
 * ``prefill_tokens_saved`` — prompt tokens served from shared blocks
   instead of re-prefilled; deterministic for a fixed trace (hits depend
   on index state, not arrival pacing), so it gates strictly like the KV
-  byte metrics.
+  byte metrics;
+* ``pipeline_bubble_frac`` — the 1F1B bubble fraction of the staged
+  train plan the bench searches on its synthetic mesh
+  (``--train-stages``); a pure cost-model output, so it gates strictly —
+  growth means the stage partitioner started leaving devices idle.
+  ``stage_count`` rides along informationally (printed, never failed
+  on): stage-count moves are strategy changes to eyeball, not
+  regressions to block.
 
 A missing baseline (first run, new cache key, metric added since) passes
 with a note — the gate tightens as the trajectory accumulates, it never
@@ -68,7 +75,12 @@ WATCHED = (
     ("chunked_itl_p99_ratio", "down", 1.0),
     ("prefix_hit_rate", "up", 0.5),
     ("prefill_tokens_saved", "up", None),
+    ("pipeline_bubble_frac", "down", None),
 )
+
+#: Reported for context, never gated: a stage-count move is a strategy
+#: change the trajectory should surface, not a regression to block on.
+INFORMATIONAL = ("stage_count",)
 
 
 def extract(report: dict) -> dict[str, float]:
@@ -119,6 +131,10 @@ def compare(baseline: dict, current: dict,
                 f"{name} regressed {b:.4g} -> {c:.4g} "
                 f"(allowed {'-' if direction == 'up' else '+'}"
                 f"{max_regression:.0%})")
+    for name in INFORMATIONAL:
+        b, c = baseline.get(name), current.get(name)
+        if b is not None or c is not None:
+            print(f"  {name}: {b} -> {c} (informational)")
     return failures
 
 

@@ -34,6 +34,12 @@ copy-on-write prefix cache serves it from shared blocks — reported as
 ``prefix_hit_rate`` (requests that reused cached blocks) and
 ``prefill_tokens_saved`` (prompt tokens never re-prefilled), both gated
 in CI alongside the other serving metrics.
+
+``--train-stages N`` additionally prices a pipeline-staged *train* plan
+(two-level search, :func:`repro.plans.search.search_phase_plan`) on a
+synthetic 8-device mesh — pure cost model, no extra runtime — and
+records ``stage_count`` (informational) and ``pipeline_bubble_frac``
+(gated: the 1F1B bubble must not grow) in the report JSON.
 """
 
 from __future__ import annotations
@@ -169,7 +175,9 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   save_plan: str = "", kv_block_size: int = 128,
                   kv_pool_blocks: int = 0, max_len: int = 0,
                   shared_prefix_len: int = 0,
-                  shared_frac: float = 0.0) -> dict:
+                  shared_frac: float = 0.0,
+                  train_stages: int = 0,
+                  train_microbatches: int = 8) -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -289,6 +297,35 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
             / max(modes["dense"]["kv_bytes_reserved"], 1), 3)
         print(f"paged/dense throughput: {report['paged_speedup']}x  "
               f"kv reserved: {report['kv_reserved_frac']:.1%} of dense")
+    if train_stages not in (0, 1):
+        # stage-dimension trajectory point: search the *train* phase with
+        # the two-level pipeline search on a fixed synthetic 8-device mesh
+        # (4 data x 2 model) — pure cost model, so stage_count and
+        # pipeline_bubble_frac are deterministic and independent of the
+        # runner's real device count; the serving trace above is untouched
+        from repro.core.device import AxisSpec, ICI_BW, MeshSpec
+        from repro.plans.search import search_phase_plan
+
+        syn = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                             AxisSpec("model", 2, ICI_BW)))
+        _, st, prov = search_phase_plan(
+            arch, syn, "train", seq_len=max(prompt_buckets), batch=8,
+            num_stages=train_stages, microbatches=train_microbatches)
+        report["stage_count"] = st.num_stages if st is not None else 1
+        report["pipeline_bubble_frac"] = prov.get("pipeline_bubble_frac", 0.0)
+        report["train_pipeline"] = {
+            "mesh": "synthetic-4x2",
+            "seq_len": int(max(prompt_buckets)),
+            "batch": 8,
+            "microbatches": int(train_microbatches),
+            "boundaries": list(st.boundaries) if st is not None else None,
+            "interstage_bytes": prov.get("interstage_bytes"),
+            "stage_costs_s": prov.get("stage_costs_s"),
+            "cost_s": prov.get("cost_s"),
+        }
+        print(f"train pipeline: S={report['stage_count']} "
+              f"M={train_microbatches} "
+              f"bubble={report['pipeline_bubble_frac']:.3f}")
     Path(out).write_text(json.dumps(report, indent=1))
     print(f"wrote {out}")
     return report
@@ -336,6 +373,15 @@ def main() -> None:
                          "mesh (the plan lands in the report JSON)")
     ap.add_argument("--plan", default="",
                     help="load a ParallelPlan JSON instead of building one")
+    ap.add_argument("--train-stages", type=int, default=0,
+                    help="also search a pipeline-staged *train* plan with "
+                         "this many stages on a synthetic 8-device mesh "
+                         "(pure cost model; -1 = auto) and record "
+                         "stage_count / pipeline_bubble_frac in the "
+                         "report for the CI gate; 0 = skip")
+    ap.add_argument("--train-microbatches", type=int, default=8,
+                    help="1F1B microbatch count M priced by the staged "
+                         "train search")
     ap.add_argument("--save-plan", default="",
                     help="persist the plan JSON next to the report")
     ap.add_argument("--smoke", action="store_true",
@@ -351,7 +397,9 @@ def main() -> None:
               save_plan=args.save_plan, kv_block_size=args.kv_block_size,
               kv_pool_blocks=args.kv_pool_blocks, max_len=args.max_len,
               shared_prefix_len=args.shared_prefix_len,
-              shared_frac=args.shared_frac)
+              shared_frac=args.shared_frac,
+              train_stages=args.train_stages,
+              train_microbatches=args.train_microbatches)
     if args.smoke:
         # CI-sized model, but the trace shape of the paged-KV acceptance
         # run: ragged 16-512 token prompts against a 2048-token row

@@ -396,6 +396,46 @@ class CostModel:
 
 
 # --------------------------------------------------------------------------- #
+# pipeline (inter-op) cost term: prices a stage partition of the layer
+# graph under a 1F1B microbatched schedule (extension beyond the paper —
+# the stage dimension the two-level search in core/stages.py optimizes)
+# --------------------------------------------------------------------------- #
+def pipeline_time(stage_costs, interstage_bytes: float, stage_bw: float,
+                  microbatches: int, training: bool = True) -> dict:
+    """Seconds per step for ``S`` pipeline stages under 1F1B.
+
+    ``stage_costs`` are each stage's intra-op seconds for the *full*
+    global batch (what per-stage ``find_strategy`` returns); a microbatch
+    costs ``C_s / M``.  1F1B keeps the slowest stage busy for
+    ``M + S - 1`` microbatch slots, so
+
+        compute = (M + S - 1) / M * max_s C_s
+        bubble_frac = (S - 1) / (S - 1 + M)
+
+    ``interstage_bytes`` is the activation bytes crossing every stage cut
+    for the full batch (the tensor bytes the graph records on the cut
+    edges); training sends them twice (activations forward, their
+    gradients back) over the factored stage axis at ``stage_bw``.
+    Transfers are priced serially — no overlap credit, conservative.
+    """
+    costs = [float(c) for c in stage_costs]
+    if not costs:
+        raise ValueError("pipeline_time needs at least one stage cost")
+    S = len(costs)
+    M = max(1, int(microbatches))
+    if S == 1:
+        return {"total": costs[0], "compute_s": costs[0], "xfer_s": 0.0,
+                "bubble_frac": 0.0, "max_stage_s": costs[0],
+                "microbatches": M}
+    bubble = (S - 1) / (S - 1 + M)
+    compute = (M + S - 1) / M * max(costs)
+    xfer = (2.0 if training else 1.0) * float(interstage_bytes) / stage_bw
+    return {"total": compute + xfer, "compute_s": compute, "xfer_s": xfer,
+            "bubble_frac": bubble, "max_stage_s": max(costs),
+            "microbatches": M}
+
+
+# --------------------------------------------------------------------------- #
 # per-device memory accounting (extension beyond the paper: the 16 GiB/chip
 # budget makes HBM capacity a binding constraint the search must respect)
 # --------------------------------------------------------------------------- #

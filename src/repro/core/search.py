@@ -35,6 +35,13 @@ class SearchOptions:
     activation_allowance: float = 2.5e9
     # Paper-faithful mode for Table-3-style comparisons.
     paper_faithful: bool = False
+    # Inter-op (pipeline) search level — consumed by
+    # core.stages.find_staged_strategy: the largest stage count the
+    # two-level search may cut the layer graph into (1 = today's purely
+    # intra-op search, bit-for-bit), and the microbatch count ``M`` the
+    # 1F1B schedule is priced (and executed) with.
+    max_stages: int = 1
+    stage_microbatches: int = 8
 
     def __post_init__(self):
         if self.paper_faithful:

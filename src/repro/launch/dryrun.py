@@ -119,22 +119,40 @@ def input_specs(arch, shape, *, dtype=jnp.bfloat16) -> dict:
             "dec_len": S, "enc_len": 0}
 
 
-def build_strategy(arch, shape, mesh_spec, strategy_name: str):
+def build_strategy(arch, shape, mesh_spec, strategy_name: str, *,
+                   num_stages: int = 0, microbatches: int = 8):
+    """Search (or apply a baseline to) one cell's graph; ``num_stages``
+    routes a train-kind search through the two-level pipeline search
+    (>1 forces the count, <0 auto-searches).  Returns
+    (graph, strategy, comm bytes, StagedStrategy | None)."""
     graph = export_graph(arch, shape)
     cm = CostModel(mesh_spec, phase=shape.kind)
+    staged = None
     if strategy_name == "search":
-        strat = find_strategy(graph, mesh_spec, phase=shape.kind)
+        if num_stages not in (0, 1) and shape.kind == "train":
+            from repro.core.stages import find_staged_strategy
+            staged = find_staged_strategy(
+                graph, mesh_spec, n_units=arch.n_units, phase=shape.kind,
+                num_stages=num_stages if num_stages > 1 else None,
+                max_stages=arch.n_units if num_stages < 0 else None,
+                microbatches=microbatches)
+            strat = staged.strategy
+            strat.cost = staged.cost
+        else:
+            strat = find_strategy(graph, mesh_spec, phase=shape.kind)
     else:
         strat = BASELINES[strategy_name](graph, mesh_spec)
         strat.cost = cm.total_time(graph, strat)
     comm = cm.comm_bytes(graph, strat)
-    return graph, strat, comm
+    return graph, strat, comm, staged
 
 
 def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                 strategy_name: str = "search", dtype=jnp.bfloat16,
                 train_cfg: TrainConfig | None = None, plan_override=None,
-                save: bool = True, tag: str = "") -> dict:
+                save: bool = True, tag: str = "",
+                num_stages: int = 0, microbatches: int = 8,
+                show_plan: bool = False) -> dict:
     arch = configs.get(arch_name)
     shape = SHAPES[shape_name]
     mesh_tag = "multi" if multi_pod else "single"
@@ -146,8 +164,25 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_spec = production_mesh_spec(multi_pod=multi_pod)
-    graph, strat, model_comm = build_strategy(arch, shape, mesh_spec,
-                                              strategy_name)
+    graph, strat, model_comm, staged = build_strategy(
+        arch, shape, mesh_spec, strategy_name,
+        num_stages=num_stages, microbatches=microbatches)
+    if show_plan or staged is not None:
+        # per-layer table, and next to it the stage assignment + pipeline
+        # cost breakdown when the search was staged
+        print(strat.describe(graph, mesh_spec))
+        if staged is not None:
+            pipe = staged.meta.get("pipeline", {})
+            print(f"stages [{shape.kind}]: {staged.stages.describe()} "
+                  f"on axis {staged.meta.get('factored_axis')!r}")
+            for s in range(staged.stages.num_stages):
+                b0, b1 = staged.stages.unit_range(s)
+                print(f"  stage {s}: units [{b0},{b1}) "
+                      f"cost={staged.stage_costs[s]:.6f}s")
+            print(f"  pipeline: total={staged.cost:.6f}s "
+                  f"bubble={staged.bubble_frac:.3f} "
+                  f"interstage={staged.interstage_bytes:.0f}B "
+                  f"xfer={pipe.get('xfer_s', 0.0):.6f}s")
     plan = plan_override or strategy_to_plan(strat, arch)
     mod = model_module(arch)
 
@@ -249,6 +284,15 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         "search_cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
         "model_comm_bytes": model_comm,
+        "pipeline": (None if staged is None else {
+            "stage_count": staged.stages.num_stages,
+            "boundaries": list(staged.stages.boundaries),
+            "microbatches": staged.stages.microbatches,
+            "bubble_frac": staged.bubble_frac,
+            "interstage_bytes": staged.interstage_bytes,
+            "stage_costs_s": list(staged.stage_costs),
+            "stage_search_seconds": staged.meta.get("stage_search_seconds"),
+        }),
         "hbm": {
             "argument_bytes": mem.argument_size_in_bytes,
             "output_bytes": mem.output_size_in_bytes,
@@ -295,6 +339,16 @@ def main() -> None:
                     choices=["single", "multi", "both"])
     ap.add_argument("--strategy", default="search",
                     choices=["search", "data", "model", "owt"])
+    ap.add_argument("--stages", type=int, default=0,
+                    help="pipeline-stage the train-kind search: >1 forces "
+                         "that stage count, -1 auto-searches; prints the "
+                         "stage assignment and pipeline cost breakdown "
+                         "next to the per-layer table")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="1F1B microbatch count M the pipeline is priced "
+                         "with (used with --stages)")
+    ap.add_argument("--show-plan", action="store_true",
+                    help="print the searched per-layer table for every cell")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -314,7 +368,10 @@ def main() -> None:
                 continue
             try:
                 r = dryrun_cell(arch_name, shape_name, multi_pod=mp,
-                                strategy_name=args.strategy)
+                                strategy_name=args.strategy,
+                                num_stages=args.stages,
+                                microbatches=args.microbatches,
+                                show_plan=args.show_plan)
                 if r["status"] == "skipped":
                     print(f"[SKIPPED] {tagname}: {r['reason']}")
                     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -117,11 +117,30 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
     q_tokens = None
     if prefill_chunk_tokens > 0:
         q_tokens = -(-(max_batch - 1 + prefill_chunk_tokens) // max_batch)
-    return resolve_plan(
+    plan = resolve_plan(
         arch, mesh_spec, phases=("prefill", "decode"),
         plan_path=plan_path, strategy=strategy, save_plan=save_plan,
         prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
         decode_kv_tokens=kv_tokens, decode_q_tokens=q_tokens)
+    # A staged *train* phase riding a loaded plan file is fine (serving
+    # ignores it); a pipeline-staged decode is not executable here —
+    # token-level decode pipelining is a named follow-up — so refuse it
+    # loudly rather than silently running stage 0's configs everywhere.
+    dec = plan.stage_for("decode")
+    if dec.num_stages > 1:
+        raise ValueError(
+            f"plan's decode phase is pipeline-staged (S={dec.num_stages}); "
+            f"the serve engine executes a single mesh — token-level decode "
+            f"pipelining is not implemented yet.  Re-search the serve plan "
+            f"without stages or load a plan whose decode phase is "
+            f"single-stage.")
+    pre = plan.stage_for("prefill")
+    if pre.num_stages > 1:
+        print(f"serve: note — plan's prefill phase is pipeline-staged "
+              f"(S={pre.num_stages}); serving runs the whole model on one "
+              f"mesh under stage-0 semantics (per-layer configs only, no "
+              f"pipelining)")
+    return plan
 
 
 def _serve_encdec(args, arch, plan) -> None:

@@ -73,6 +73,14 @@ def main() -> None:
     ap.add_argument("--strategy", default="search",
                     choices=["search", "searched", "data", "model", "owt",
                              "uniform", "none"])
+    ap.add_argument("--pipeline-stages", type=int, default=0,
+                    help="pipeline the train phase over this many stages "
+                         "(searched two-level; needs --strategy search and "
+                         "a device count divisible by it); 0/1 = no "
+                         "pipelining, -1 = auto-search the stage count")
+    ap.add_argument("--microbatches", type=int, default=8,
+                    help="1F1B microbatch count M when pipelining "
+                         "(--batch must divide by it)")
     ap.add_argument("--plan", default="",
                     help="load a ParallelPlan JSON (the train phase is "
                          "used); overrides --strategy, refuses an arch "
@@ -116,15 +124,29 @@ def main() -> None:
     pplan = resolve_plan(
         arch, mesh_spec if n_dev > 1 else None, phases=("train",),
         plan_path=args.plan, strategy=name, save_plan=args.save_plan,
-        train_seq=args.seq, train_batch=args.batch)
+        train_seq=args.seq, train_batch=args.batch,
+        train_stages=args.pipeline_stages,
+        train_microbatches=args.microbatches)
     plan = pplan.plan_for("train")
+    train_stages = pplan.stage_for("train")
+    if train_stages.num_stages > 1:
+        # the execution mesh factors the searched stage axis out of the
+        # device grid so the stage-sharded stack PartitionSpecs resolve;
+        # a non-dividing device count drops the axis (replicated stack)
+        S = train_stages.num_stages
+        if n_dev % S == 0 and n_dev >= S:
+            mesh = compat.make_mesh((S, n_dev // S, 1),
+                                    (train_stages.mesh_axis, "data", "model"))
+        print(f"train: pipeline S={S} M={train_stages.microbatches} "
+              f"boundaries={train_stages.boundaries}")
 
     mod = model_module(arch)
     opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=20,
                           total_steps=args.steps)
     tcfg = TrainConfig(optimizer=opt_cfg, q_chunk=256, time_chunk=32,
                        remat=True, kernel_backend=args.kernel_backend or None)
-    step_fn = make_train_step(arch, plan, tcfg)
+    step_fn = make_train_step(
+        arch, pplan if train_stages.num_stages > 1 else plan, tcfg)
     ds = make_dataset(arch, shape)
 
     ckpt = CheckpointManager(args.ckpt_dir)
@@ -140,7 +162,8 @@ def main() -> None:
             start_step = step
             print(f"resumed from step {step}")
 
-    p_sh = to_shardings(param_pspecs(params, arch, plan), mesh, like=params)
+    p_sh = to_shardings(param_pspecs(params, arch, plan, stages=train_stages),
+                        mesh, like=params)
     params = jax.device_put(params, p_sh)
     jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
 

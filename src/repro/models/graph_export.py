@@ -41,6 +41,10 @@ class _Builder:
         self.kind = shape.kind
         self.mult = 3.0 if self.kind == "train" else 1.0
         self.last: str | None = None
+        # stage-cut metadata: the pattern-unit index stamped on every node
+        # (entry nodes -1, head nodes n_units) — what the stage partitioner
+        # in core/stages.py cuts the graph by.
+        self.unit: int | None = None
 
     def node(self, name: str, kind: str, out: TensorSpec, flops: float = 0.0,
              params: float = 0.0, act: float = 0.0,
@@ -48,6 +52,8 @@ class _Builder:
              chain: bool = True) -> str:
         extra = dict(extra or {})
         extra.setdefault("dim_sizes", {})
+        if self.unit is not None:
+            extra.setdefault("unit", self.unit)
         n = LayerNode(name, kind, out, flops=self.mult * flops,
                       param_bytes=params, act_bytes=self.mult * act,
                       parallel_dims=dims, extra=extra)
@@ -184,6 +190,7 @@ def _decoder_chain(b: _Builder, arch: ArchConfig, B: int, Sq: int, Skv: int,
 
     for i in range(arch.n_layers):
         spec = arch.pattern[i % arch.period]
+        b.unit = i // arch.period
         entry = b.last
         norm(f"{prefix}L{i}.ln1")
         if spec.mixer == "attn":
@@ -224,6 +231,7 @@ def _decoder_chain(b: _Builder, arch: ArchConfig, B: int, Sq: int, Skv: int,
 def _head(b: _Builder, arch: ArchConfig, B: int, Sq: int):
     D, V = arch.d_model, arch.vocab
     T = B * Sq
+    b.unit = arch.n_units            # head rides the last stage
     act = TensorSpec.make(batch=B, seq=Sq, d_model=D)
     b.node("final_norm", "norm", act, flops=6 * T * D, act=2 * act.bytes,
            params=4 * D, dims=("batch", "seq", "d_model"),
@@ -244,6 +252,7 @@ def _export_decoder(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     D, V = arch.d_model, arch.vocab
     T = B * Sq
     b = _Builder(arch, shape)
+    b.unit = -1                      # entry nodes ride stage 0
     act = TensorSpec.make(batch=B, seq=Sq, d_model=D)
     b.node("embed", "embed", act, flops=2 * T * D,
            params=V * D * P_BYTES, act=3 * act.bytes,
@@ -284,6 +293,7 @@ def _export_encdec(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
     enc_arch = _enc_view(arch)
 
     b = _Builder(arch, shape)
+    b.unit = -1                      # enc-dec graphs are not stageable yet
     enc_act = TensorSpec.make(batch=B, seq=Se, d_model=D)
     b.node("enc_in", "stub", enc_act, flops=2 * B * Se * D * D,
            params=D * D * P_BYTES, act=3 * enc_act.bytes,

@@ -27,11 +27,15 @@ from pathlib import Path
 
 from repro.core.config import LayerConfig
 from repro.core.device import ICI_BW, TPU_V5E, AxisSpec, MeshSpec
+from repro.core.stages import StageAssignment, single_stage
 from repro.models.arch import ArchConfig
 from repro.models.plan import ModelPlan, Segment, uniform_plan
 
 SCHEMA = "repro.parallel_plan"
-SCHEMA_VERSION = 1
+# v2 adds the per-phase ``stages`` dict (pipeline stage assignments);
+# v1 files load with every phase defaulting to a single stage.
+SCHEMA_VERSION = 2
+_READABLE_VERSIONS = (1, 2)
 
 #: The phase axis: one ModelPlan per entry a plan may carry.
 PHASES = ("train", "prefill", "decode")
@@ -127,6 +131,18 @@ def model_plan_from_json(d: dict) -> ModelPlan:
     )
 
 
+def _stages_to_json(st: StageAssignment) -> dict:
+    return {"boundaries": list(st.boundaries),
+            "microbatches": st.microbatches,
+            "mesh_axis": st.mesh_axis}
+
+
+def _stages_from_json(d: dict) -> StageAssignment:
+    return StageAssignment(boundaries=tuple(int(b) for b in d["boundaries"]),
+                           microbatches=int(d.get("microbatches", 1)),
+                           mesh_axis=str(d.get("mesh_axis", "stage")))
+
+
 def _mesh_to_json(mesh: MeshSpec | None) -> dict | None:
     if mesh is None:
         return None
@@ -157,6 +173,8 @@ class ParallelPlan:
     phases: dict[str, ModelPlan]
     mesh: MeshSpec | None = None
     meta: dict = field(default_factory=dict)
+    #: phase name -> pipeline StageAssignment; absent phases are single-stage.
+    stages: dict[str, StageAssignment] = field(default_factory=dict)
 
     # ------------------------------------------------------------------ #
     def __post_init__(self):
@@ -165,6 +183,14 @@ class ParallelPlan:
                 raise PlanError(f"unknown phase {ph!r}; expected one of {PHASES}")
         if not self.phases:
             raise PlanError("a ParallelPlan needs at least one phase")
+        for ph, st in self.stages.items():
+            if ph not in PHASES:
+                raise PlanError(
+                    f"unknown stage phase {ph!r}; expected one of {PHASES}")
+            if not isinstance(st, StageAssignment):
+                raise PlanError(
+                    f"stages[{ph!r}] must be a StageAssignment, "
+                    f"got {type(st).__name__}")
 
     def resolved_phase(self, phase: str) -> str:
         """The carried phase ``plan_for(phase)`` resolves to — ``phase``
@@ -186,6 +212,17 @@ class ParallelPlan:
         phase the plan carries (see ``_FALLBACK``)."""
         return self.phases[self.resolved_phase(phase)]
 
+    def stage_for(self, phase: str) -> StageAssignment:
+        """The pipeline stage assignment for ``phase`` (resolved through
+        the same fallback chain as ``plan_for``); phases the plan carries
+        no assignment for are single-stage."""
+        resolved = self.resolved_phase(phase)
+        if resolved in self.stages:
+            return self.stages[resolved]
+        n_layers = int(self.arch.get("n_layers") or 1)
+        period = len(self.arch.get("pattern") or ()) or 1
+        return single_stage(max(1, n_layers // period))
+
     @property
     def strategy_name(self) -> str:
         return self.meta.get("strategy", "unknown")
@@ -197,6 +234,8 @@ class ParallelPlan:
         for ph in PHASES:
             if ph in self.phases:
                 lines.append(f"-- {ph} --")
+                if ph in self.stages and self.stages[ph].num_stages > 1:
+                    lines.append(f"pipeline: {self.stages[ph].describe()}")
                 lines.append(self.phases[ph].describe())
         return "\n".join(lines)
 
@@ -221,6 +260,8 @@ class ParallelPlan:
             "mesh": _mesh_to_json(self.mesh),
             "phases": {ph: model_plan_to_json(p)
                        for ph, p in self.phases.items()},
+            "stages": {ph: _stages_to_json(st)
+                       for ph, st in self.stages.items()},
             "meta": self.meta,
         }
 
@@ -248,20 +289,23 @@ class ParallelPlan:
         if data.get("schema") != SCHEMA:
             raise PlanFormatError(
                 f"not a ParallelPlan file (schema={data.get('schema')!r})")
-        if data.get("version") != SCHEMA_VERSION:
+        if data.get("version") not in _READABLE_VERSIONS:
             raise PlanFormatError(
                 f"unsupported plan schema version {data.get('version')!r} "
-                f"(this build reads version {SCHEMA_VERSION})")
+                f"(this build reads versions {_READABLE_VERSIONS})")
         try:
             # PlanError (e.g. an unknown phase key) is a ValueError and is
             # wrapped below too: anything wrong inside a *file* is a
-            # format error by contract.
+            # format error by contract.  v1 files predate pipeline stages:
+            # every phase defaults to a single stage (stages={}).
             plan = cls(
                 arch=dict(data["arch"]),
                 phases={ph: model_plan_from_json(p)
                         for ph, p in data["phases"].items()},
                 mesh=_mesh_from_json(data.get("mesh")),
                 meta=dict(data.get("meta", {})),
+                stages={ph: _stages_from_json(st)
+                        for ph, st in data.get("stages", {}).items()},
             )
         except (KeyError, TypeError, ValueError, AttributeError) as e:
             raise PlanFormatError(f"malformed plan payload: {e!r}") from e

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 from repro.core.device import MeshSpec
 from repro.core.search import SearchOptions, find_strategy
+from repro.core.stages import StageAssignment, find_staged_strategy
 from repro.core.strategies import BASELINES
 from repro.models.arch import ArchConfig
 from repro.models.graph_export import export_graph, phase_shape
@@ -34,15 +35,48 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
                       seq_len: int, batch: int,
                       kv_tokens: int | None = None,
                       q_tokens: int | None = None,
+                      num_stages: int = 0, microbatches: int = 8,
                       options: SearchOptions | None = None,
-                      ) -> tuple[ModelPlan, dict]:
-    """Search one phase; returns (realized plan, provenance dict).
+                      ) -> tuple[ModelPlan, StageAssignment | None, dict]:
+    """Search one phase; returns (realized plan, stage assignment or
+    ``None`` when the phase is unstaged, provenance dict).
     ``kv_tokens`` prices the decode phase's cache read at the paged
     engine's allocated-blocks depth; ``q_tokens`` prices the mixed step's
-    per-slot query width (see :func:`phase_shape`)."""
+    per-slot query width (see :func:`phase_shape`).  ``num_stages``
+    routes the phase through the two-level pipeline search
+    (:func:`~repro.core.stages.find_staged_strategy`): >1 forces that
+    stage count, <0 auto-searches up to ``options.max_stages``; 0/1 keep
+    today's single-level search bit-for-bit."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
                         kv_tokens=kv_tokens, q_tokens=q_tokens)
     graph = export_graph(arch, shape)
+    opts = options or SearchOptions()
+    # auto mode: sweep up to options.max_stages when set, else every
+    # feasible contiguous cut of the unit stack
+    auto_max = ((opts.max_stages if opts.max_stages > 1 else arch.n_units)
+                if num_stages < 0 else 0)
+    if num_stages > 1 or auto_max > 1:
+        staged = find_staged_strategy(
+            graph, mesh, n_units=arch.n_units, phase=phase, options=options,
+            num_stages=num_stages if num_stages > 1 else None,
+            max_stages=auto_max if auto_max > 1 else None,
+            microbatches=microbatches)
+        strat, stages = staged.strategy, staged.stages
+        pipe = staged.meta.get("pipeline", {})
+        prov = {
+            "phase": phase,
+            "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
+                      "kind": shape.kind, "q_tokens": shape.q_tokens},
+            "cost_s": staged.cost,
+            "search_seconds": staged.meta.get("stage_search_seconds"),
+            "stage_count": stages.num_stages,
+            "pipeline_bubble_frac": staged.bubble_frac,
+            "interstage_bytes": staged.interstage_bytes,
+            "stage_search_seconds": staged.meta.get("stage_search_seconds"),
+            "stage_costs_s": list(staged.stage_costs),
+            "pipeline_xfer_s": pipe.get("xfer_s"),
+        }
+        return strategy_to_plan(strat, arch), stages, prov
     strat = find_strategy(graph, mesh, phase=phase, options=options)
     prov = {
         "phase": phase,
@@ -51,7 +85,7 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
         "cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
     }
-    return strategy_to_plan(strat, arch), prov
+    return strategy_to_plan(strat, arch), None, prov
 
 
 def baseline_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str,
@@ -78,6 +112,8 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                         max_batch: int = 8, max_len: int | None = None,
                         decode_kv_tokens: int | None = None,
                         decode_q_tokens: int | None = None,
+                        train_stages: int = 0,
+                        train_microbatches: int = 8,
                         options: SearchOptions | None = None) -> ParallelPlan:
     """Build a ParallelPlan for ``phases`` under one named strategy.
 
@@ -93,6 +129,12 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     cache read stays put — the plan the search returns reflects that
     trade.  ``mesh=None`` (single device) degrades to the uniform plan
     regardless of ``strategy``.
+
+    ``train_stages`` routes the train phase through the two-level
+    pipeline search (>1 forces that stage count, <0 auto-searches up to
+    ``options.max_stages``); serve phases stay single-stage — token-level
+    decode pipelining is a named follow-up.  Requires
+    ``strategy="searched"``.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
@@ -100,6 +142,10 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     unknown = [p for p in phases if p not in PHASES]
     if unknown:
         raise ValueError(f"unknown phases {unknown}; expected from {PHASES}")
+    if train_stages not in (0, 1) and strategy != "searched":
+        raise ValueError(
+            f"train_stages={train_stages} needs strategy='searched' "
+            f"(got {strategy!r}); baselines are single-stage")
     if mesh is None or strategy == "uniform":
         return ParallelPlan.uniform(arch, phases=tuple(phases), mesh=mesh)
 
@@ -109,15 +155,20 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
         "decode": (max_len or prompt_len, max_batch),
     }
     plans: dict[str, ModelPlan] = {}
+    stages: dict[str, "StageAssignment"] = {}
     phase_meta: dict[str, dict] = {}
     for phase in phases:
         seq_len, batch = shapes[phase]
         kv = decode_kv_tokens if phase == "decode" else None
         qt = decode_q_tokens if phase == "decode" else None
         if strategy == "searched":
-            plans[phase], phase_meta[phase] = search_phase_plan(
+            ns = train_stages if phase == "train" else 0
+            plans[phase], st, phase_meta[phase] = search_phase_plan(
                 arch, mesh, phase, seq_len=seq_len, batch=batch,
-                kv_tokens=kv, q_tokens=qt, options=options)
+                kv_tokens=kv, q_tokens=qt, options=options,
+                num_stages=ns, microbatches=train_microbatches)
+            if st is not None and st.num_stages > 1:
+                stages[phase] = st
         else:
             plans[phase], phase_meta[phase] = baseline_phase_plan(
                 arch, mesh, phase, strategy, seq_len=seq_len, batch=batch,
@@ -126,6 +177,7 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
 
     return ParallelPlan(
         arch=arch_fingerprint(arch), phases=plans, mesh=mesh,
+        stages=stages,
         meta={"strategy": strategy, "phases": phase_meta,
               "jax": jax.__version__})
 
@@ -138,6 +190,8 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                  max_len: int | None = None,
                  decode_kv_tokens: int | None = None,
                  decode_q_tokens: int | None = None,
+                 train_stages: int = 0,
+                 train_microbatches: int = 8,
                  options: SearchOptions | None = None,
                  log=print) -> ParallelPlan:
     """The plan tri-logic every driver shares: ``plan_path`` (load,
@@ -164,6 +218,11 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             log(f"plan: note — plan searched for mesh {axes(plan.mesh)} "
                 f"but this host runs {axes(mesh)}; non-dividing axes "
                 f"drop to replication at realization")
+        for phase in phases:
+            st = plan.stage_for(phase)
+            if st.num_stages > 1:
+                log(f"plan: {phase} is pipeline-staged "
+                    f"(S={st.num_stages}, M={st.microbatches})")
     else:
         if mesh is None and strategy != "uniform":
             log(f"plan: single device — strategy {strategy!r} degrades "
@@ -173,11 +232,18 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             train_seq=train_seq, train_batch=train_batch,
             prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
             decode_kv_tokens=decode_kv_tokens,
-            decode_q_tokens=decode_q_tokens, options=options)
+            decode_q_tokens=decode_q_tokens,
+            train_stages=train_stages,
+            train_microbatches=train_microbatches, options=options)
         for phase, pm in plan.meta.get("phases", {}).items():
             cost = pm.get("cost_s")
             if cost is not None:
                 log(f"plan: {phase} cost model {cost:.6f}s/step")
+            if pm.get("stage_count", 1) > 1:
+                log(f"plan: {phase} pipeline S={pm['stage_count']} "
+                    f"M={plan.stage_for(phase).microbatches} "
+                    f"bubble={pm['pipeline_bubble_frac']:.3f} "
+                    f"interstage={pm['interstage_bytes']:.0f}B")
     if save_plan:
         plan.save(save_plan)
         log(f"plan: wrote {save_plan}")

@@ -83,10 +83,23 @@ def dominant_unit_plan(segments) -> UnitPlan | None:
     return max(segments, key=lambda s: s.n_units).plan
 
 
-def param_pspecs(params, arch: ArchConfig, plan: ModelPlan):
-    """Pytree of PartitionSpec mirroring ``params``."""
+def param_pspecs(params, arch: ArchConfig, plan: ModelPlan, *,
+                 stages=None):
+    """Pytree of PartitionSpec mirroring ``params``.
+
+    ``stages`` (a :class:`~repro.core.stages.StageAssignment` with
+    ``num_stages > 1``) places the stacked decoder parameters by pipeline
+    stage: the leading unit dim of every ``stack.*`` leaf is sharded over
+    the stage mesh axis, so each stage's device group holds exactly its
+    contiguous unit range — the stage sub-mesh placement the staged
+    search priced.  (Contiguous stages over homogeneous units map to
+    equal leading-dim slices, which is what a named-axis shard is.)
+    """
     dec_plan = dominant_unit_plan(plan.segments)
     enc_plan = dominant_unit_plan(plan.enc_segments)
+    stage_axis = None
+    if stages is not None and stages.num_stages > 1:
+        stage_axis = stages.mesh_axis
 
     def add_fsdp_axes(spec: P, shape, cfg: LayerConfig,
                       mesh_axis_sizes) -> P:
@@ -142,16 +155,19 @@ def param_pspecs(params, arch: ArchConfig, plan: ModelPlan):
             j = int(lkey[1:])
             sub = unit_plan[j] if unit_plan else {}
             sublayer, pname = keys[2], keys[3]
+            lead = stage_axis if top == "stack" else None
             if sublayer in ("ln1", "ln2", "ln_x"):
-                return P(*([None] * leaf.ndim))
+                return P(*((lead,) + (None,) * (leaf.ndim - 1)))
             rule = _RULES.get((sublayer, pname))
             if rule is None:
-                return P(*([None] * leaf.ndim))
+                return P(*((lead,) + (None,) * (leaf.ndim - 1)))
             cfg_key, dims = rule
             cfg = sub.get(cfg_key, R)
             spec = pspec(cfg, dims)
             spec = add_fsdp_axes(spec, leaf.shape[1:], cfg, axis_sizes)
-            return P(*((None,) + tuple(spec)))   # leading unit dim
+            # leading unit dim: stage-sharded when pipelined (decoder
+            # stack only — encdec graphs are not stageable)
+            return P(*((lead,) + tuple(spec)))
         return P(*([None] * leaf.ndim))
 
     return jax.tree_util.tree_map_with_path(leaf_spec, params)

@@ -134,6 +134,21 @@ def test_workflow_bench_job_exercises_searched_phase_plan():
     assert uploads and "BENCH_*.json" in uploads[0]["with"]["path"]
 
 
+def test_workflow_bench_job_searches_staged_train_plan():
+    """Both serving-bench steps must price a 2-stage 1F1B train plan so
+    stage_count / pipeline_bubble_frac land in the gated report and the
+    two-level search stays exercised in CI."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    staged = [s for s in job["steps"]
+              if "--train-stages 2" in s.get("run", "")]
+    assert len(staged) >= 2, "gated smoke AND phase-plan smoke must stage"
+    # the gated report (the one compare_bench reads) carries the fields
+    gated = next(s for s in staged
+                 if "--out BENCH_serving.json" in s["run"])
+    assert "--train-microbatches" in gated["run"]
+
+
 def _compat_grep(tree: Path) -> int:
     """The exact gate the lint job runs, pointed at ``tree``/src."""
     script = ('hits="$(grep -rn "CompilerParams\\|AxisType" src/ '
@@ -173,14 +188,17 @@ def test_compare_bench_gate_logic():
             "chunked_itl_p99_ratio": 0.55,
             "prefix_hit_rate": 0.71,
             "prefill_tokens_saved": 6144,
+            "stage_count": 2,
+            "pipeline_bubble_frac": 0.111,
             "modes": {"continuous": {"kv_bytes_reserved": 1000,
                                      "itl_p99_ms": 40.0}}}
 
     def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55,
-            hit=0.71, saved=6144):
+            hit=0.71, saved=6144, stages=2, bubble=0.111):
         return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
                 "chunked_itl_p99_ratio": ratio,
                 "prefix_hit_rate": hit, "prefill_tokens_saved": saved,
+                "stage_count": stages, "pipeline_bubble_frac": bubble,
                 "modes": {"continuous": {"kv_bytes_reserved": kv,
                                          "itl_p99_ms": itl}}}
 
@@ -218,6 +236,12 @@ def test_compare_bench_gate_logic():
     assert any("prefill_tokens_saved" in f
                for f in compare(base, cur(saved=4000), 0.15))
     assert compare(base, cur(saved=6000), 0.15) == []
+    # the 1F1B bubble is a pure cost-model output: strict, no floor
+    assert any("pipeline_bubble_frac" in f
+               for f in compare(base, cur(bubble=0.2), 0.15))
+    assert compare(base, cur(bubble=0.09), 0.15) == []   # shrinking is fine
+    # stage_count is informational: a move never fails the gate
+    assert compare(base, cur(stages=4), 0.15) == []
     # a metric the baseline proves existed must not vanish silently
     gone = cur()
     del gone["kv_reserved_frac"]

@@ -1,0 +1,335 @@
+"""Pipeline stages as a searched plan dimension.
+
+The two-level search (stage partition x per-layer elimination DP) must
+be a strict superset of today's search: ``S=1`` reproduces the unstaged
+``find_strategy`` bit-for-bit for every arch, the staged plan
+round-trips through the v2 JSON schema (with v1 files defaulting to
+single-stage), and on the 4x2 mesh at least one arch prices a 2-stage
+1F1B plan strictly cheaper than the best single-stage plan.  The
+acceptance criterion — a searched 2-stage 1F1B ``make_train_step``
+running with stage-sharded params on an 8-virtual-device mesh and
+matching the single-stage loss — runs in a subprocess so the device
+count is set before jax initializes.
+"""
+
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro import configs as C
+from repro.core import AxisSpec, ICI_BW, MeshSpec, find_strategy
+from repro.core.cost_model import pipeline_time
+from repro.core.stages import (StageAssignment, factor_stage_mesh,
+                               find_staged_strategy, partition_units,
+                               single_stage)
+from repro.models.graph_export import export_graph, phase_shape
+
+MESH = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                      AxisSpec("model", 2, ICI_BW)))
+
+
+# --------------------------------------------------------------------------- #
+# building blocks
+# --------------------------------------------------------------------------- #
+def test_stage_assignment_invariants():
+    st = StageAssignment((0, 2, 4), microbatches=8)
+    assert st.num_stages == 2 and st.n_units == 4
+    assert [st.stage_of_unit(u) for u in (-1, 0, 1, 2, 3, 4)] == \
+        [0, 0, 0, 1, 1, 1]           # entry clamps to 0, head to last
+    assert st.unit_range(1) == (2, 4)
+    assert single_stage(6).num_stages == 1
+    for bad in ((), (1, 2), (0, 2, 2), (0, 3, 1)):
+        with pytest.raises(ValueError):
+            StageAssignment(bad)
+
+
+def test_partition_units_balances_homogeneous_weights():
+    assert partition_units([1.0] * 8, 2) == (0, 4, 8)
+    assert partition_units([1.0] * 8, 4) == (0, 2, 4, 6, 8)
+    # heavy unit attracts a short stage
+    assert partition_units([10.0, 1.0, 1.0, 1.0], 2) == (0, 1, 4)
+    with pytest.raises(ValueError):
+        partition_units([1.0, 1.0], 3)
+
+
+def test_factor_stage_mesh_prefers_divisible_non_pod_axis():
+    name, sub = factor_stage_mesh(MESH, 2)
+    assert name == "data"
+    assert dict((a.name, a.size) for a in sub.axes) == {"data": 2, "model": 2}
+    pod = MeshSpec(axes=(AxisSpec("pod", 4, 1e9), AxisSpec("model", 3, ICI_BW)))
+    assert factor_stage_mesh(pod, 2) is None   # pod never factors; 3 % 2 != 0
+
+
+def test_pipeline_time_formula():
+    one = pipeline_time([2.0], 0.0, 1e9, 4)
+    assert one["total"] == 2.0 and one["bubble_frac"] == 0.0
+    p = pipeline_time([1.0, 1.0], 1e9, 1e9, 4, training=True)
+    assert p["bubble_frac"] == pytest.approx(1 / 5)        # (S-1)/(S-1+M)
+    assert p["compute_s"] == pytest.approx(5 / 4)          # (M+S-1)/M * max
+    assert p["xfer_s"] == pytest.approx(2.0)               # fwd + bwd
+    assert p["total"] == pytest.approx(5 / 4 + 2.0)
+    assert pipeline_time([1.0, 1.0], 1e9, 1e9, 4,
+                         training=False)["xfer_s"] == pytest.approx(1.0)
+
+
+# --------------------------------------------------------------------------- #
+# S=1 is bit-for-bit today's search — for every arch in configs
+# --------------------------------------------------------------------------- #
+def test_s1_stage_search_is_unstaged_search_for_every_arch():
+    for name in C.ALL_ARCHS:
+        arch = C.reduced(name)
+        graph = export_graph(arch, phase_shape("train", seq_len=64, batch=8))
+        plain = find_strategy(graph, MESH, phase="train")
+        staged = find_staged_strategy(graph, MESH, n_units=arch.n_units,
+                                      phase="train", num_stages=1)
+        assert staged.cost == plain.cost, name
+        assert staged.strategy.assignment == plain.assignment, name
+        assert staged.stages.num_stages == 1
+        assert staged.bubble_frac == 0.0
+        assert staged.interstage_bytes == 0.0
+
+
+def test_two_stage_prices_strictly_cheaper_for_some_arch_on_4x2():
+    """Sync-dominated shapes (tiny batch/seq, parameter-heavy archs):
+    halving both the per-stage parameters and the gradient-sync ring must
+    beat the 1F1B bubble for at least one arch."""
+    wins = []
+    for name in ("olmoe_1b_7b", "phi3_5_moe_42b", "jamba_1_5_large"):
+        arch = C.reduced(name)
+        graph = export_graph(arch, phase_shape("train", seq_len=32, batch=4))
+        s1 = find_staged_strategy(graph, MESH, n_units=arch.n_units,
+                                  phase="train", num_stages=1)
+        s2 = find_staged_strategy(graph, MESH, n_units=arch.n_units,
+                                  phase="train", num_stages=2,
+                                  microbatches=16)
+        if s2.cost < s1.cost:
+            wins.append(name)
+            # auto mode must then also pick S=2 over S=1
+            auto = find_staged_strategy(graph, MESH, n_units=arch.n_units,
+                                        phase="train", max_stages=2,
+                                        microbatches=16)
+            assert auto.stages.num_stages == 2, name
+            assert auto.cost == s2.cost, name
+    assert wins, "no arch priced 2 stages cheaper than 1 on the 4x2 mesh"
+
+
+def test_staged_search_metadata_and_encdec_refusal():
+    arch = C.reduced("llama3_2_1b")
+    graph = export_graph(arch, phase_shape("train", seq_len=64, batch=8))
+    s2 = find_staged_strategy(graph, MESH, n_units=arch.n_units,
+                              phase="train", num_stages=2, microbatches=8)
+    assert s2.stages.boundaries == (0, 1, 2)
+    assert s2.bubble_frac == pytest.approx(1 / 9)
+    assert s2.interstage_bytes > 0
+    assert len(s2.meta["per_stage"]) == 2
+    assert s2.meta["factored_axis"] == "data"
+    assert s2.meta["stage_search_seconds"] > 0
+    # every node got a config from exactly one stage's DP
+    assert set(s2.strategy.assignment) == set(graph.nodes)
+
+    enc = C.reduced("seamless_m4t_v2")
+    eg = export_graph(enc, phase_shape("train", seq_len=64, batch=8))
+    with pytest.raises(ValueError, match="decoder-only"):
+        find_staged_strategy(eg, MESH, n_units=enc.n_units,
+                             phase="train", num_stages=2)
+    # auto mode degrades to single-stage instead of raising
+    auto = find_staged_strategy(eg, MESH, n_units=enc.n_units,
+                                phase="train", max_stages=2)
+    assert auto.stages.num_stages == 1
+
+
+# --------------------------------------------------------------------------- #
+# schema v2 round-trip + v1 fixture fallback
+# --------------------------------------------------------------------------- #
+def test_staged_plan_roundtrips_and_v1_fixture_defaults_single_stage(tmp_path):
+    from repro.plans import build_parallel_plan
+    from repro.plans.parallel_plan import (ParallelPlan, PlanFormatError,
+                                           SCHEMA_VERSION)
+
+    assert SCHEMA_VERSION == 2
+    arch = C.reduced("llama3_2_1b")
+    pp = build_parallel_plan(arch, MESH, strategy="searched",
+                             phases=("train",), train_seq=64, train_batch=8,
+                             train_stages=2, train_microbatches=4)
+    path = pp.save(tmp_path / "plan.json")
+    loaded = ParallelPlan.load(path, arch=arch)
+    assert loaded.stages["train"] == pp.stages["train"]
+    assert loaded.stage_for("train").num_stages == 2
+    assert loaded.stage_for("train").microbatches == 4
+    prov = loaded.meta["phases"]["train"]
+    assert prov["stage_count"] == 2
+    assert prov["pipeline_bubble_frac"] > 0
+    assert prov["interstage_bytes"] > 0
+    assert prov["stage_search_seconds"] > 0
+    assert len(prov["stage_costs_s"]) == 2
+
+    # v1 fixture: the previous schema, no "stages" key — loads with every
+    # phase defaulting to a single stage
+    data = pp.to_json()
+    data["version"] = 1
+    del data["stages"]
+    v1_path = tmp_path / "v1.json"
+    v1_path.write_text(json.dumps(data))
+    v1 = ParallelPlan.load(v1_path, arch=arch)
+    assert v1.stages == {}
+    st = v1.stage_for("train")
+    assert st.num_stages == 1 and st.n_units == arch.n_units
+    # and it re-saves as v2, round-tripping the phase plans unchanged
+    re_path = v1.save(tmp_path / "resaved.json")
+    again = ParallelPlan.load(re_path, arch=arch)
+    assert again.phases == pp.phases
+
+    # future versions and corrupt files stay refused
+    data["version"] = 999
+    v1_path.write_text(json.dumps(data))
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(v1_path)
+    v1_path.write_text("{not json")
+    with pytest.raises(PlanFormatError):
+        ParallelPlan.load(v1_path)
+
+
+def test_serve_refuses_staged_decode_plan(tmp_path):
+    from repro.launch.serve import resolve_serve_plan
+    from repro.plans.parallel_plan import ParallelPlan
+
+    arch = C.reduced("llama3_2_1b")
+    base = ParallelPlan.uniform(arch, phases=("prefill", "decode"), mesh=MESH)
+    staged_decode = ParallelPlan(
+        arch=base.arch, phases=base.phases, mesh=base.mesh, meta=base.meta,
+        stages={"decode": StageAssignment((0, 1, 2), microbatches=4)})
+    path = staged_decode.save(tmp_path / "decode_staged.json")
+    with pytest.raises(ValueError, match="pipeline-staged"):
+        resolve_serve_plan(arch, MESH, plan_path=str(path),
+                           prompt_len=16, max_batch=2, max_len=32)
+
+    # a staged *prefill* phase is tolerated (stage-0 semantics, loud note)
+    staged_prefill = ParallelPlan(
+        arch=base.arch, phases=base.phases, mesh=base.mesh, meta=base.meta,
+        stages={"prefill": StageAssignment((0, 1, 2), microbatches=4)})
+    path2 = staged_prefill.save(tmp_path / "prefill_staged.json")
+    plan = resolve_serve_plan(arch, MESH, plan_path=str(path2),
+                              prompt_len=16, max_batch=2, max_len=32)
+    assert plan.stage_for("decode").num_stages == 1
+
+
+def test_staged_step_refuses_non_lm_archs():
+    from repro.plans.parallel_plan import ParallelPlan
+    from repro.train import TrainConfig, make_train_step
+
+    arch = C.reduced("seamless_m4t_v2")
+    base = ParallelPlan.uniform(arch, phases=("train",))
+    pp = ParallelPlan(
+        arch=base.arch, phases=base.phases, mesh=base.mesh, meta=base.meta,
+        stages={"train": StageAssignment((0, arch.n_units // 2 or 1,
+                                          arch.n_units), microbatches=2)})
+    with pytest.raises(ValueError, match="decoder-only"):
+        make_train_step(arch, pp, TrainConfig())
+
+
+# --------------------------------------------------------------------------- #
+# 1F1B numerics: staged step == single-stage step on the same batch
+# --------------------------------------------------------------------------- #
+def test_staged_train_step_matches_single_stage_loss():
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.optim import adamw_init
+    from repro.plans import build_parallel_plan
+    from repro.train import TrainConfig, make_train_step
+
+    arch = C.reduced("llama3_2_1b")
+    pp2 = build_parallel_plan(arch, MESH, strategy="searched",
+                              phases=("train",), train_seq=64, train_batch=8,
+                              train_stages=2, train_microbatches=4)
+    pp1 = build_parallel_plan(arch, MESH, strategy="searched",
+                              phases=("train",), train_seq=64, train_batch=8)
+    params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+    opt = adamw_init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 64), 0,
+                                          arch.vocab)}
+    cfg = TrainConfig(kernel_backend="xla")
+    p1, _, m1 = jax.jit(make_train_step(arch, pp1, cfg))(params, opt, batch)
+    p2, _, m2 = jax.jit(make_train_step(arch, pp2, cfg))(params, opt, batch)
+    assert float(m2["loss"]) == pytest.approx(float(m1["loss"]), rel=2e-5)
+    assert float(m2["nll"]) == pytest.approx(float(m1["nll"]), rel=2e-5)
+    diffs = jax.tree.leaves(jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), p1, p2))
+    assert max(diffs) < 1e-5
+
+
+ACCEPTANCE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys
+    sys.path.insert(0, "src")
+    import tempfile
+    import jax, jax.numpy as jnp
+    from repro import compat, configs as C
+    from repro.core import AxisSpec, ICI_BW, MeshSpec
+    from repro.core.sharding import use_mesh
+    from repro.models import lm
+    from repro.optim import adamw_init
+    from repro.plans import (ParallelPlan, build_parallel_plan,
+                             param_pspecs, to_shardings)
+    from repro.train import TrainConfig, make_train_step
+
+    arch = C.reduced("llama3_2_1b")
+    mesh_spec = MeshSpec(axes=(AxisSpec("data", 4, ICI_BW),
+                               AxisSpec("model", 2, ICI_BW)))
+    pp = build_parallel_plan(arch, mesh_spec, strategy="searched",
+                             phases=("train",), train_seq=64, train_batch=8,
+                             train_stages=2, train_microbatches=4)
+    stages = pp.stage_for("train")
+    assert stages.num_stages == 2
+
+    # the staged plan survives the JSON round trip
+    with tempfile.TemporaryDirectory() as d:
+        loaded = ParallelPlan.load(pp.save(d + "/plan.json"), arch=arch)
+    assert loaded.stage_for("train") == stages
+
+    params = lm.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
+    opt = adamw_init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (8, 64),
+                                          0, arch.vocab)}
+    cfg = TrainConfig(kernel_backend="xla")
+
+    # single-stage oracle (same batch, single device)
+    pp1 = build_parallel_plan(arch, mesh_spec, strategy="searched",
+                              phases=("train",), train_seq=64, train_batch=8)
+    _, _, m1 = jax.jit(make_train_step(arch, pp1, cfg))(params, opt, batch)
+
+    # 2-stage 1F1B on the factored stage x data x model mesh, params
+    # placed per stage by the stage-axis PartitionSpecs
+    mesh = compat.make_mesh((2, 2, 2), ("stage", "data", "model"))
+    plan = loaded.plan_for("train")
+    specs = param_pspecs(params, arch, plan, stages=stages)
+    stack_specs = jax.tree.leaves(
+        specs["stack"], is_leaf=lambda x: hasattr(x, "_parsed_pspec")
+                                          or type(x).__name__ == "PartitionSpec")
+    assert all(s[0] == "stage" for s in stack_specs), stack_specs[:3]
+    p_sh = to_shardings(specs, mesh, like=params)
+    with use_mesh(mesh):
+        sharded = jax.device_put(params, p_sh)
+        spans = [len(x.sharding.device_set)
+                 for x in jax.tree.leaves(sharded["stack"])]
+        assert min(spans) >= 2, spans   # stacks really split by stage
+        step = jax.jit(make_train_step(arch, loaded, cfg))
+        _, _, m2 = step(sharded, adamw_init(sharded), batch)
+    l1, l2 = float(m1["loss"]), float(m2["loss"])
+    assert abs(l1 - l2) / abs(l1) < 2e-5, (l1, l2)
+    print("OK staged-loss=%.6f single-loss=%.6f span=%d" %
+          (l2, l1, max(spans)))
+""")
+
+
+@pytest.mark.slow
+def test_searched_two_stage_1f1b_step_runs_sharded_on_8_devices():
+    r = subprocess.run([sys.executable, "-c", ACCEPTANCE],
+                       capture_output=True, text=True, timeout=1200, cwd=".")
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "OK" in r.stdout, r.stdout
