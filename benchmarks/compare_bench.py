@@ -35,7 +35,11 @@ fails when a watched metric regresses by more than ``--max-regression``:
   growth means the stage partitioner started leaving devices idle.
   ``stage_count`` rides along informationally (printed, never failed
   on): stage-count moves are strategy changes to eyeball, not
-  regressions to block.
+  regressions to block;
+* ``cost_model_rel_error`` — median per-layer relative error of the
+  profile-calibrated cost model against timed equivalents
+  (``--device-profile``); growth past the tolerance *and* the 1.0 noise
+  floor means the calibration pipeline drifted off this hardware.
 
 A missing baseline (first run, new cache key, metric added since) passes
 with a note — the gate tightens as the trajectory accumulates, it never
@@ -76,6 +80,11 @@ WATCHED = (
     ("prefix_hit_rate", "up", 0.5),
     ("prefill_tokens_saved", "up", None),
     ("pipeline_bubble_frac", "down", None),
+    # cost-model calibration error (median per-layer |pred-meas|/meas with
+    # a --device-profile): growth means the measured profile stopped
+    # predicting this host.  Timed on a shared runner, so it carries a
+    # 1.0 noise floor — only fails while the model is also off by >100%.
+    ("cost_model_rel_error", "down", 1.0),
 )
 
 #: Reported for context, never gated: a stage-count move is a strategy

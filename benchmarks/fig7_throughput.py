@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from repro.core import (BASELINES, CostModel, MeshSpec, AxisSpec, ICI_BW,
                         POD_BW, find_strategy)
+from repro.core.device import TPU_V5E_HBM_BYTES
 from repro.models.arch import SHAPES
 
 from .common import BENCH_ARCHS, cell
@@ -39,7 +40,7 @@ def _with_fsdp(strategy, graph, mesh):
 def run(print_fn=print, archs=None) -> list[dict]:
     from repro.core.cost_model import strategy_device_bytes
 
-    budget = 16 * 1024**3 * 0.85
+    budget = TPU_V5E_HBM_BYTES * 0.85
     rows = []
     for arch_name in (archs or BENCH_ARCHS):
         arch, shape, graph = cell(arch_name, "train_4k")

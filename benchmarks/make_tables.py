@@ -10,6 +10,7 @@ import json
 from pathlib import Path
 
 from repro import configs
+from repro.core.device import TPU_V5E_PEAK_FLOPS
 from repro.models.arch import SHAPES
 
 RESULTS = Path(__file__).resolve().parents[1] / "results"
@@ -49,7 +50,7 @@ def roofline_table(mesh: str = "single") -> str:
         mf = model_flops(d["arch"], d["shape"]) / d["n_chips"]
         useful = mf / max(d["hlo_flops_per_device"], 1e-9)
         step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
-        frac = (mf / 197e12) / max(step, 1e-12)
+        frac = (mf / TPU_V5E_PEAK_FLOPS) / max(step, 1e-12)
         mem = d["hbm"]["per_device_total"] / 2**30
         fits = "yes" if d["hbm"]["fits_16GiB"] else "NO"
         rows.append(

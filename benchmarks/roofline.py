@@ -8,6 +8,7 @@ import json
 from pathlib import Path
 
 from repro import configs
+from repro.core.device import TPU_V5E_PEAK_FLOPS
 from repro.models.arch import SHAPES
 
 RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
@@ -48,7 +49,7 @@ def run(print_fn=print) -> list[dict]:
         hlo = d["hlo_flops_per_device"]
         util = mf / max(hlo, 1e-9)
         step = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
-        mfu_bound = (mf / 197e12) / max(step, 1e-12)
+        mfu_bound = (mf / TPU_V5E_PEAK_FLOPS) / max(step, 1e-12)
         rows.append({**{k: d[k] for k in ("cell", "arch", "shape", "mesh",
                                           "strategy", "n_chips")},
                      **rf, "model_flops_per_dev": mf,

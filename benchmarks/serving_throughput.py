@@ -177,7 +177,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   shared_prefix_len: int = 0,
                   shared_frac: float = 0.0,
                   train_stages: int = 0,
-                  train_microbatches: int = 8) -> dict:
+                  train_microbatches: int = 8,
+                  profile_path: str = "") -> dict:
     import jax
     import jax.numpy as jnp
 
@@ -202,7 +203,8 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         max_batch=max_batch, max_len=max_len,
         kv_block_size=kv_block_size, typical_tokens=typical,
         prefill_chunk_tokens=chunk,
-        shared_prefix_tokens=shared_prefix_len, save_plan=save_plan)
+        shared_prefix_tokens=shared_prefix_len, save_plan=save_plan,
+        profile_path=profile_path)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
@@ -238,6 +240,35 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         },
         "modes": {},
     }
+    if profile_path:
+        # calibration truth: the measured profile's roofline predictions
+        # vs a timed equivalent of each decode-graph layer's per-device
+        # work on this host — median relative error is the gated headline
+        # (a calibrated cost model that drifts is a regression)
+        from repro.core import CostModel
+        from repro.models.arch import ShapeSpec
+        from repro.models.graph_export import export_graph
+        from repro.profiling import layer_report, load_profile
+
+        prof = load_profile(profile_path)
+        graph = export_graph(arch, ShapeSpec(
+            "bench_decode", max(prompt_buckets), max_batch, "decode"))
+        cm_cal = CostModel.from_profile(prof, mesh_spec, training=False,
+                                        phase="decode")
+        calib = layer_report(graph, cm_cal)
+        report["device_profile"] = {
+            "path": profile_path,
+            "device_kind": prof.device_kind,
+            "fingerprint": prof.fingerprint(),
+            "measured_flops": prof.measured_flops,
+            "measured_hbm_bw": prof.measured_hbm_bw,
+        }
+        report["cost_model_rel_error"] = calib["median_rel_error"]
+        report["cost_model_max_rel_error"] = calib["max_rel_error"]
+        print(f"cost model calibration: median rel error "
+              f"{calib['median_rel_error']:.3f} over "
+              f"{calib['num_layers']} layers (max "
+              f"{calib['max_rel_error']:.3f})")
     # (mode name, admission policy, block size, pool blocks, chunk): the
     # paged continuous/static pair measures scheduling, the dense
     # continuous baseline measures the paging memory/throughput delta,
@@ -384,6 +415,11 @@ def main() -> None:
                          "train search")
     ap.add_argument("--save-plan", default="",
                     help="persist the plan JSON next to the report")
+    ap.add_argument("--device-profile", default="",
+                    help="measured DeviceProfile JSON (launch.profile); "
+                         "calibrates the plan search's cost model and "
+                         "records cost_model_rel_error + profile "
+                         "provenance in the report")
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run (tiny model, few requests)")
     ap.add_argument("--out", default="BENCH_serving.json")
@@ -399,7 +435,8 @@ def main() -> None:
               shared_prefix_len=args.shared_prefix_len,
               shared_frac=args.shared_frac,
               train_stages=args.train_stages,
-              train_microbatches=args.train_microbatches)
+              train_microbatches=args.train_microbatches,
+              profile_path=args.device_profile)
     if args.smoke:
         # CI-sized model, but the trace shape of the paged-KV acceptance
         # run: ragged 16-512 token prompts against a 2048-token row

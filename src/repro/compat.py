@@ -36,6 +36,7 @@ __all__ = [
     "make_mesh",
     "default_platform",
     "is_tracer",
+    "shard_map",
 ]
 
 HAS_PALLAS = _pltpu is not None
@@ -91,6 +92,29 @@ def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
         enum = getattr(_AXIS_TYPE_CLS, axis_types.capitalize())
         kw["axis_types"] = (enum,) * len(tuple(axis_names))
     return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+
+
+# --------------------------------------------------------------------------- #
+# shard_map: graduated from jax.experimental.shard_map to jax.shard_map.
+# --------------------------------------------------------------------------- #
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_rep: bool = False):
+    """``shard_map`` under whichever home the installed JAX exports, with
+    the replication check disabled when the installed signature has it
+    (the profiling microbench maps raw collectives whose replication
+    XLA cannot always infer)."""
+    kw: dict[str, Any] = {}
+    params = inspect.signature(_shard_map).parameters
+    for name in ("check_rep", "check_vma"):  # renamed across releases
+        if name in params:
+            kw[name] = check_rep
+            break
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kw)
 
 
 # --------------------------------------------------------------------------- #

@@ -65,11 +65,21 @@ def register_kernel_cost_hook(op: str, backend: str):
 
 
 def kernel_time_factor(node: LayerNode,
-                       kernel_backends: dict[str, str]) -> float:
+                       kernel_backends: dict[str, str],
+                       overrides: dict[tuple[str, str], float] | None = None,
+                       ) -> float:
+    """Multiplicative roofline factor for ``node`` under the chosen
+    dispatch backends.  ``overrides`` — measured ``(op, backend) ->
+    factor`` entries from a device profile — take precedence over the
+    registered analytic hooks; absent entries fall back hook-by-hook."""
     op = KERNEL_OP_FOR_KIND.get(node.kind)
     backend = kernel_backends.get(op) if op else None
     if backend is None:
         return 1.0
+    if overrides:
+        measured = overrides.get((op, backend))
+        if measured is not None:
+            return measured
     fn = _KERNEL_COST_HOOKS.get((op, backend))
     return fn(node) if fn is not None else 1.0
 
@@ -118,7 +128,8 @@ def _moe_pallas_factor(node: LayerNode) -> float:
 class CostModel:
     def __init__(self, mesh: MeshSpec, training: bool = True,
                  kernel_backends: dict[str, str] | None = None,
-                 phase: str | None = None):
+                 phase: str | None = None,
+                 kernel_factors: dict[tuple[str, str], float] | None = None):
         """``phase`` ("train" | "prefill" | "decode") is the workload the
         model prices; it subsumes the older ``training`` flag — prefill
         and decode reuse the inference machinery (no t_S, no bwd
@@ -136,28 +147,58 @@ class CostModel:
         # op name -> dispatch backend the strategy will execute with (see
         # kernel cost hooks above); absent ops price at factor 1.0.
         self.kernel_backends = dict(kernel_backends or {})
+        # measured (op, backend) -> factor overrides from a device profile;
+        # consulted before the registered analytic hooks.
+        self.kernel_factors = dict(kernel_factors or {})
         self._reshard_cache: dict = {}
         # memoization of per-node vectors / per-edge matrices: sound here
         # because t_C/t_S/t_X are pure functions of the keyed quantities
         self._node_vec_cache: dict = {}
         self._edge_mat_cache: dict = {}
 
+    @classmethod
+    def from_profile(cls, profile, mesh: MeshSpec, training: bool = True,
+                     kernel_backends: dict[str, str] | None = None,
+                     phase: str | None = None) -> "CostModel":
+        """A cost model calibrated by a measured device profile.
+
+        ``profile`` is any object with the :class:`~repro.profiling.
+        DeviceProfile` calibration surface — ``calibrate_mesh(mesh)``
+        (measured chip efficiencies + per-axis collective curves) and
+        ``kernel_factors()`` (measured per-(op, backend) roofline
+        factors).  Fields the profile lacks keep their analytic values,
+        so ``from_profile(None, mesh, ...)`` — or an empty profile — is
+        bit-identical to ``CostModel(mesh, ...)``.
+        """
+        factors = None
+        if profile is not None:
+            mesh = profile.calibrate_mesh(mesh)
+            factors = profile.kernel_factors()
+        return cls(mesh, training=training, kernel_backends=kernel_backends,
+                   phase=phase, kernel_factors=factors)
+
     # ------------------------------------------------------------------ #
     # t_C
     # ------------------------------------------------------------------ #
-    def t_c(self, node: LayerNode, cfg: LayerConfig) -> float:
+    def roofline_time(self, node: LayerNode, cfg: LayerConfig) -> float:
+        """The pure on-chip part of :meth:`t_c` — max(compute, memory)
+        times the kernel backend factor, with no collective terms.  This
+        is the quantity the profiling calibration report compares against
+        a measured execution of the node's per-device work."""
         mesh = self.mesh
         deg = cfg.degree(mesh)
-        # parameters are not sharded by batch/seq axes: per-device HBM
-        # traffic splits activations by the full degree but parameters only
-        # by the param-dim degree.
         pdeg = max(1, cfg.degree(mesh, dims=[d for d in cfg.dims
                                              if d not in ("batch", "seq")]))
         compute = node.flops / deg / mesh.chip.eff_flops
         memory = (node.act_bytes / deg
                   + node.param_bytes / pdeg) / mesh.chip.eff_hbm_bw
-        factor = kernel_time_factor(node, self.kernel_backends)
-        t = factor * max(compute, memory) + self.internal_comm(node, cfg).time
+        factor = kernel_time_factor(node, self.kernel_backends,
+                                    self.kernel_factors)
+        return factor * max(compute, memory)
+
+    def t_c(self, node: LayerNode, cfg: LayerConfig) -> float:
+        mesh = self.mesh
+        t = self.roofline_time(node, cfg) + self.internal_comm(node, cfg).time
         if cfg.fsdp and node.param_bytes > 0:
             # FSDP: params stored sharded across the replicating axes and
             # all-gathered at each use (fwd + bwd re-gather).
@@ -322,16 +363,19 @@ class CostModel:
         t = b = 0.0
         # 1) axes sharded in src but unused in dst: all-gather (grow local).
         for ax in mesh.axes:
-            if ax.name in rs and ax.name not in rd:
+            if ax.name in rs and ax.name not in rd and ax.size > 1:
                 stage = (ax.size - 1) * local
-                t += stage / ax.bw
+                alpha, bw = ax.curve("all_gather")
+                t += alpha + stage / bw
                 b += stage
                 local *= ax.size
         # 2) axes whose sharded dim changes: all-to-all at current local size.
         for ax in mesh.axes:
-            if ax.name in rs and ax.name in rd and rs[ax.name] != rd[ax.name]:
+            if (ax.name in rs and ax.name in rd and rs[ax.name] != rd[ax.name]
+                    and ax.size > 1):
                 stage = (ax.size - 1) / ax.size * local
-                t += stage / ax.bw
+                alpha, bw = ax.curve("all_to_all")
+                t += alpha + stage / bw
                 b += stage
         # 3) axes only in dst: a local slice — free.
         return CollectiveCost(t, b)

@@ -17,6 +17,33 @@ from dataclasses import dataclass
 
 GiB = 1024**3
 
+# ---- analytic hardware constants (one seam per number) -------------------- #
+# Every hand-written roofline/topology constant the cost model falls back to
+# when no measured :class:`~repro.profiling.DeviceProfile` overrides it lives
+# here under a name.  ``launch.profile`` measures the machine-specific
+# replacements; nothing outside this module should restate these literals.
+
+#: Fraction of peak FLOP/s realistically achievable on dense matmuls;
+#: replaced by ``measured_flops / peak_flops`` under a device profile.
+DEFAULT_MXU_EFFICIENCY = 0.55
+#: Fraction of peak HBM bandwidth realistically achievable on streaming
+#: reads; replaced by ``measured_hbm_bw / hbm_bw`` under a device profile.
+DEFAULT_HBM_EFFICIENCY = 0.8
+
+#: TPU v5e roofline constants (the grading target): 197 TFLOP/s bf16,
+#: 819 GB/s HBM, 16 GiB capacity, 128 MiB VMEM.
+TPU_V5E_PEAK_FLOPS = 197e12
+TPU_V5E_HBM_BW = 819e9
+TPU_V5E_HBM_BYTES = 16 * GiB
+TPU_V5E_VMEM_BYTES = 128 * 1024**2
+
+ICI_BW = 50e9        # intra-pod ICI, per link
+POD_BW = 12.5e9      # inter-pod (DCN/optical) — heavily discounted
+
+#: Collective kinds an axis can carry a measured alpha-beta curve for.
+COLLECTIVE_KINDS = ("all_reduce", "reduce_scatter", "all_gather",
+                    "all_to_all")
+
 
 @dataclass(frozen=True)
 class ChipSpec:
@@ -27,10 +54,10 @@ class ChipSpec:
     hbm_bw: float            # bytes/s
     hbm_bytes: float         # capacity, bytes
     vmem_bytes: float        # on-chip vector memory, bytes
-    # Fraction of peak realistically achievable on dense matmuls; used by the
-    # cost model so t_C is not absurdly optimistic.  Calibratable.
-    mxu_efficiency: float = 0.55
-    hbm_efficiency: float = 0.8
+    # Fraction of peak realistically achievable; calibrated from a measured
+    # DeviceProfile via ChipSpec.calibrated(), analytic defaults otherwise.
+    mxu_efficiency: float = DEFAULT_MXU_EFFICIENCY
+    hbm_efficiency: float = DEFAULT_HBM_EFFICIENCY
 
     @property
     def eff_flops(self) -> float:
@@ -40,15 +67,26 @@ class ChipSpec:
     def eff_hbm_bw(self) -> float:
         return self.hbm_bw * self.hbm_efficiency
 
+    def calibrated(self, measured_flops: float | None = None,
+                   measured_hbm_bw: float | None = None) -> "ChipSpec":
+        """A copy whose efficiencies make ``eff_flops`` / ``eff_hbm_bw``
+        equal the measured rates; ``None`` keeps the analytic default
+        (field-by-field fallback)."""
+        kw = {}
+        if measured_flops is not None and measured_flops > 0:
+            kw["mxu_efficiency"] = float(measured_flops) / self.peak_flops
+        if measured_hbm_bw is not None and measured_hbm_bw > 0:
+            kw["hbm_efficiency"] = float(measured_hbm_bw) / self.hbm_bw
+        return dataclasses.replace(self, **kw) if kw else self
 
-# TPU v5e (the grading target): 197 TFLOP/s bf16, 819 GB/s HBM, 16 GiB,
-# ~50 GB/s per ICI link.
+
+# TPU v5e (the grading target).
 TPU_V5E = ChipSpec(
     name="tpu_v5e",
-    peak_flops=197e12,
-    hbm_bw=819e9,
-    hbm_bytes=16 * GiB,
-    vmem_bytes=128 * 1024**2,
+    peak_flops=TPU_V5E_PEAK_FLOPS,
+    hbm_bw=TPU_V5E_HBM_BW,
+    hbm_bytes=TPU_V5E_HBM_BYTES,
+    vmem_bytes=TPU_V5E_VMEM_BYTES,
 )
 
 
@@ -74,15 +112,27 @@ ZERO_COST = CollectiveCost(0.0, 0.0)
 @dataclass(frozen=True)
 class AxisSpec:
     """One named mesh axis: its size and the link bandwidth collectives over
-    it see (bytes/s per chip)."""
+    it see (bytes/s per chip).
+
+    ``curves`` optionally carries measured alpha-beta collective curves as
+    ``(kind, alpha_seconds, bw_bytes_per_s)`` triples — one per collective
+    kind in :data:`COLLECTIVE_KINDS` — fitted by the profiling microbench
+    (``t = alpha + wire_bytes / bw``).  An axis without a curve for a kind
+    prices it from the analytic ``bw`` with zero latency, so the default
+    (empty) tuple is bit-identical to the uncalibrated model.
+    """
 
     name: str
     size: int
     bw: float  # bytes/s per chip for ring collectives along this axis
+    curves: tuple[tuple[str, float, float], ...] = ()
 
-
-ICI_BW = 50e9        # intra-pod ICI, per link
-POD_BW = 12.5e9      # inter-pod (DCN/optical) — heavily discounted
+    def curve(self, kind: str) -> tuple[float, float]:
+        """``(alpha_seconds, bw_bytes_per_s)`` for one collective kind."""
+        for k, alpha, bw in self.curves:
+            if k == kind:
+                return alpha, bw
+        return 0.0, self.bw
 
 
 @dataclass(frozen=True)
@@ -123,7 +173,10 @@ class MeshSpec:
 
     # ---- collective primitives (ring algorithms) ---------------------- #
     # Each returns ``CollectiveCost(time, bytes)``: seconds on the slowest
-    # participating chip, and per-chip bytes sent over the wire.
+    # participating chip, and per-chip bytes sent over the wire.  Per-axis
+    # stages price as ``alpha + wire_bytes / bw`` from the axis's measured
+    # curve for that collective kind; the analytic fallback is alpha=0 at
+    # the axis's nominal ``bw`` (see AxisSpec.curve).
 
     def all_reduce(self, bytes_full: float, axes: tuple[str, ...]) -> "CollectiveCost":
         """Ring all-reduce of a ``bytes_full`` buffer over ``axes``.
@@ -139,7 +192,8 @@ class MeshSpec:
             if a.size == 1:
                 continue
             stage = 2.0 * (a.size - 1) / a.size * live
-            t += stage / a.bw
+            alpha, bw = a.curve("all_reduce")
+            t += alpha + stage / bw
             b += stage
             live /= a.size
         return CollectiveCost(t, b)
@@ -152,7 +206,8 @@ class MeshSpec:
             if a.size == 1:
                 continue
             stage = (a.size - 1) / a.size * live
-            t += stage / a.bw
+            alpha, bw = a.curve("reduce_scatter")
+            t += alpha + stage / bw
             b += stage
             live /= a.size
         return CollectiveCost(t, b)
@@ -166,7 +221,8 @@ class MeshSpec:
             if a.size == 1:
                 continue
             stage = (a.size - 1) * live
-            t += stage / a.bw
+            alpha, bw = a.curve("all_gather")
+            t += alpha + stage / bw
             b += stage
             live *= a.size
         return CollectiveCost(t, b)
@@ -179,7 +235,8 @@ class MeshSpec:
             if a.size == 1:
                 continue
             stage = (a.size - 1) / a.size * bytes_local
-            t += stage / a.bw
+            alpha, bw = a.curve("all_to_all")
+            t += alpha + stage / bw
             b += stage
         return CollectiveCost(t, b)
 

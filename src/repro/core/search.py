@@ -92,7 +92,8 @@ def find_strategy(graph: CompGraph, mesh: MeshSpec,
                   training: bool = True,
                   options: SearchOptions | None = None,
                   configs: dict[str, list[LayerConfig]] | None = None,
-                  phase: str | None = None) -> Strategy:
+                  phase: str | None = None,
+                  profile=None) -> Strategy:
     """Optimal strategy under the cost model; when an ``hbm_budget`` is set,
     a Lagrangian-relaxation loop adds a per-byte price to each node's
     persistent memory and re-solves until the plan fits (extension beyond
@@ -103,9 +104,17 @@ def find_strategy(graph: CompGraph, mesh: MeshSpec,
     phase's shape and the matching phase here — decode prices a
     single-token ragged batch over the cache slots with no gradient
     sync, prefill a batch-1 long sequence (both reuse the
-    ``training=False`` machinery)."""
+    ``training=False`` machinery).
+
+    ``profile`` — a measured :class:`~repro.profiling.DeviceProfile` —
+    calibrates the cost model (:meth:`CostModel.from_profile`); the
+    search then optimizes against measured chip rates and collective
+    curves instead of the analytic constants, and the strategy's meta
+    records the profile fingerprint.  ``None`` is bit-identical to
+    today's analytic search."""
     options = options or SearchOptions()
-    cm = CostModel(mesh, training=training, phase=phase)
+    cm = CostModel.from_profile(profile, mesh, training=training, phase=phase)
+    mesh = cm.mesh                     # calibrated (or unchanged) mesh
     training = cm.training
     cfgs = configs if configs is not None else config_space(graph, mesh, options)
     t0 = time.perf_counter()
@@ -172,6 +181,8 @@ def find_strategy(graph: CompGraph, mesh: MeshSpec,
     strategy.meta["mesh"] = mesh
     strategy.meta["training"] = training
     strategy.meta["phase"] = cm.phase
+    if profile is not None:
+        strategy.meta["device_profile"] = profile.fingerprint()
     return strategy
 
 

@@ -207,7 +207,8 @@ def find_staged_strategy(graph: CompGraph, mesh: MeshSpec, *,
                          num_stages: int | None = None,
                          max_stages: int | None = None,
                          microbatches: int = 8,
-                         mesh_axis: str = STAGE_AXIS) -> StagedStrategy:
+                         mesh_axis: str = STAGE_AXIS,
+                         profile=None) -> StagedStrategy:
     """Two-level search: stage partition x per-stage elimination DP.
 
     ``num_stages`` forces an exact stage count; ``max_stages`` searches
@@ -215,8 +216,15 @@ def find_staged_strategy(graph: CompGraph, mesh: MeshSpec, *,
     the cheapest pipelined plan.  ``S=1`` is the unstaged
     :func:`find_strategy` on the untouched graph and mesh — bit-for-bit
     today's search.
+
+    ``profile`` (a measured DeviceProfile) calibrates both search levels:
+    each stage's elimination DP prices on the calibrated sub-mesh and the
+    inter-stage transfer term uses the factored axis's measured
+    bandwidth.
     """
     options = options or SearchOptions()
+    if profile is not None:
+        mesh = profile.calibrate_mesh(mesh)  # idempotent under find_strategy
     M = max(1, int(microbatches))
     if num_stages is not None and num_stages < 1:
         raise ValueError(f"num_stages must be >= 1, got {num_stages}")
@@ -233,7 +241,8 @@ def find_staged_strategy(graph: CompGraph, mesh: MeshSpec, *,
     for S in wanted:
         if S == 1:
             strat = find_strategy(graph, mesh, training=training,
-                                  options=options, phase=phase)
+                                  options=options, phase=phase,
+                                  profile=profile)
             candidates.append(StagedStrategy(
                 strategy=strat, stages=single_stage(n_units),
                 stage_costs=(strat.cost,), cost=strat.cost,
@@ -281,7 +290,8 @@ def find_staged_strategy(graph: CompGraph, mesh: MeshSpec, *,
         for s in range(S):
             sub = _stage_subgraph(graph, members[s])
             strat = find_strategy(sub, submesh, training=training,
-                                  options=options, phase=phase)
+                                  options=options, phase=phase,
+                                  profile=profile)
             merged.update(strat.assignment)
             stage_costs.append(strat.cost)
             stage_meta.append({
@@ -307,6 +317,8 @@ def find_staged_strategy(graph: CompGraph, mesh: MeshSpec, *,
             f"no feasible stage count in {wanted} for mesh "
             f"{[(a.name, a.size) for a in mesh.axes]} and {n_units} units")
     best = min(candidates, key=lambda c: c.cost)
+    if profile is not None:
+        best.meta["device_profile"] = profile.fingerprint()
     best.meta["stage_search_seconds"] = time.perf_counter() - t0
     best.meta["stage_candidates"] = [
         {"stages": c.stages.num_stages, "cost_s": c.cost} for c in candidates]

@@ -37,6 +37,8 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import CostModel, find_strategy, BASELINES
+from repro.core.device import (ICI_BW, TPU_V5E_HBM_BW, TPU_V5E_HBM_BYTES,
+                               TPU_V5E_PEAK_FLOPS)
 from repro.core.sharding import use_mesh
 from repro.launch.mesh import make_production_mesh, production_mesh_spec
 from repro.models import model_module, strategy_to_plan, uniform_plan
@@ -51,11 +53,12 @@ from repro.optim.adamw import zero1_state_pspecs
 
 RESULTS = Path(__file__).resolve().parents[3] / "results" / "dryrun"
 
-# TPU v5e roofline constants (per chip)
-PEAK_FLOPS = 197e12
-HBM_BW = 819e9
-LINK_BW = 50e9
-HBM_BYTES = 16 * 1024**3
+# TPU v5e roofline constants (per chip) — raw peaks: the compiled-HLO
+# roofline reads the hardware ceiling, not the derated cost-model rates
+PEAK_FLOPS = TPU_V5E_PEAK_FLOPS
+HBM_BW = TPU_V5E_HBM_BW
+LINK_BW = ICI_BW
+HBM_BYTES = TPU_V5E_HBM_BYTES
 
 _COLL_RE = re.compile(
     r"=\s+(\w+)\[([\d,]*)\][^\s]*\s+"
@@ -120,13 +123,16 @@ def input_specs(arch, shape, *, dtype=jnp.bfloat16) -> dict:
 
 
 def build_strategy(arch, shape, mesh_spec, strategy_name: str, *,
-                   num_stages: int = 0, microbatches: int = 8):
+                   num_stages: int = 0, microbatches: int = 8,
+                   profile=None):
     """Search (or apply a baseline to) one cell's graph; ``num_stages``
     routes a train-kind search through the two-level pipeline search
-    (>1 forces the count, <0 auto-searches).  Returns
+    (>1 forces the count, <0 auto-searches); ``profile`` (a measured
+    DeviceProfile) calibrates the cost model first.  Returns
     (graph, strategy, comm bytes, StagedStrategy | None)."""
     graph = export_graph(arch, shape)
-    cm = CostModel(mesh_spec, phase=shape.kind)
+    cm = CostModel.from_profile(profile, mesh_spec, phase=shape.kind)
+    mesh_spec = cm.mesh
     staged = None
     if strategy_name == "search":
         if num_stages not in (0, 1) and shape.kind == "train":
@@ -135,11 +141,12 @@ def build_strategy(arch, shape, mesh_spec, strategy_name: str, *,
                 graph, mesh_spec, n_units=arch.n_units, phase=shape.kind,
                 num_stages=num_stages if num_stages > 1 else None,
                 max_stages=arch.n_units if num_stages < 0 else None,
-                microbatches=microbatches)
+                microbatches=microbatches, profile=profile)
             strat = staged.strategy
             strat.cost = staged.cost
         else:
-            strat = find_strategy(graph, mesh_spec, phase=shape.kind)
+            strat = find_strategy(graph, mesh_spec, phase=shape.kind,
+                                  profile=profile)
     else:
         strat = BASELINES[strategy_name](graph, mesh_spec)
         strat.cost = cm.total_time(graph, strat)
@@ -152,7 +159,7 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
                 train_cfg: TrainConfig | None = None, plan_override=None,
                 save: bool = True, tag: str = "",
                 num_stages: int = 0, microbatches: int = 8,
-                show_plan: bool = False) -> dict:
+                show_plan: bool = False, profile_path: str = "") -> dict:
     arch = configs.get(arch_name)
     shape = SHAPES[shape_name]
     mesh_tag = "multi" if multi_pod else "single"
@@ -161,12 +168,28 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     if skip:
         return {"cell": cell_id, "status": "skipped", "reason": skip}
 
+    profile = None
+    if profile_path:
+        from repro.profiling import load_profile
+        profile = load_profile(profile_path)
+        print(f"dryrun: device profile {profile_path} "
+              f"[{profile.device_kind}] calibrates the cost model")
+
     t0 = time.time()
     mesh = make_production_mesh(multi_pod=multi_pod)
     mesh_spec = production_mesh_spec(multi_pod=multi_pod)
     graph, strat, model_comm, staged = build_strategy(
         arch, shape, mesh_spec, strategy_name,
-        num_stages=num_stages, microbatches=microbatches)
+        num_stages=num_stages, microbatches=microbatches, profile=profile)
+    calib = None
+    if profile is not None:
+        # predicted-vs-measured per layer: the calibrated roofline against
+        # a timed equivalent of each layer's per-device work on this host
+        from repro.profiling import format_layer_report, layer_report
+        cm_cal = CostModel.from_profile(profile, mesh_spec,
+                                        phase=shape.kind)
+        calib = layer_report(graph, cm_cal, strat)
+        print(format_layer_report(calib))
     if show_plan or staged is not None:
         # per-layer table, and next to it the stage assignment + pipeline
         # cost breakdown when the search was staged
@@ -263,6 +286,8 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
     deep = analyze(hlo)
 
     n_chips = mesh.devices.size
+    if isinstance(cost, list):  # CPU backend wraps the dict in a list
+        cost = cost[0] if cost else {}
     flops_raw = float(cost.get("flops", 0.0)) if cost else 0.0
     bytes_raw = float(cost.get("bytes accessed", 0.0)) if cost else 0.0
     flops = max(flops_raw, deep["flops"])
@@ -283,6 +308,12 @@ def dryrun_cell(arch_name: str, shape_name: str, *, multi_pod: bool,
         "n_chips": n_chips,
         "search_cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
+        "device_profile": strat.meta.get("device_profile"),
+        "calibration": (None if calib is None else {
+            "median_rel_error": calib["median_rel_error"],
+            "max_rel_error": calib["max_rel_error"],
+            "num_layers": calib["num_layers"],
+        }),
         "model_comm_bytes": model_comm,
         "pipeline": (None if staged is None else {
             "stage_count": staged.stages.num_stages,
@@ -349,6 +380,10 @@ def main() -> None:
                          "with (used with --stages)")
     ap.add_argument("--show-plan", action="store_true",
                     help="print the searched per-layer table for every cell")
+    ap.add_argument("--device-profile", default="",
+                    help="measured DeviceProfile JSON (launch.profile); "
+                         "calibrates the search cost model and prints a "
+                         "per-layer predicted-vs-measured report")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--skip-existing", action="store_true")
     args = ap.parse_args()
@@ -371,7 +406,8 @@ def main() -> None:
                                 strategy_name=args.strategy,
                                 num_stages=args.stages,
                                 microbatches=args.microbatches,
-                                show_plan=args.show_plan)
+                                show_plan=args.show_plan,
+                                profile_path=args.device_profile)
                 if r["status"] == "skipped":
                     print(f"[SKIPPED] {tagname}: {r['reason']}")
                     RESULTS.mkdir(parents=True, exist_ok=True)

@@ -78,7 +78,8 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
                        typical_tokens: int | None = None,
                        prefill_chunk_tokens: int = 0,
                        shared_prefix_tokens: int = 0,
-                       save_plan: str = "") -> ParallelPlan:
+                       save_plan: str = "",
+                       profile_path: str = "") -> ParallelPlan:
     """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
     serving process executes are prefill + decode (shared by this
     driver and the serving benchmark).
@@ -121,7 +122,8 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
         arch, mesh_spec, phases=("prefill", "decode"),
         plan_path=plan_path, strategy=strategy, save_plan=save_plan,
         prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
-        decode_kv_tokens=kv_tokens, decode_q_tokens=q_tokens)
+        decode_kv_tokens=kv_tokens, decode_q_tokens=q_tokens,
+        profile_path=profile_path)
     # A staged *train* phase riding a loaded plan file is fine (serving
     # ignores it); a pipeline-staged decode is not executable here —
     # token-level decode pipelining is a named follow-up — so refuse it
@@ -264,6 +266,10 @@ def main() -> None:
                          "(pallas|interpret|xla|ref) for every op — "
                          "attention, wkv6, mamba_scan, moe_dispatch_combine;"
                          " default auto")
+    ap.add_argument("--device-profile", default="",
+                    help="measured DeviceProfile JSON (launch.profile); "
+                         "calibrates the plan search's cost model to this "
+                         "host instead of the analytic constants")
     ap.add_argument("--autotune-cache-dir", default="",
                     help="directory for the persistent Pallas block-size "
                          "autotune cache (default ~/.cache/repro/autotune; "
@@ -293,7 +299,7 @@ def main() -> None:
         max_batch=args.batch, max_len=max_len,
         kv_block_size=args.kv_block_size, prefill_chunk_tokens=chunk,
         shared_prefix_tokens=args.shared_prefix_tokens,
-        save_plan=args.save_plan)
+        save_plan=args.save_plan, profile_path=args.device_profile)
     if arch.enc_layers:
         with use_mesh(mesh if n_dev > 1 else None):
             _serve_encdec(args, arch, plan)

@@ -104,6 +104,10 @@ def main() -> None:
                     help="directory for the persistent Pallas block-size "
                          "autotune cache (default ~/.cache/repro/autotune; "
                          "same as REPRO_AUTOTUNE_CACHE_DIR)")
+    ap.add_argument("--device-profile", default="",
+                    help="measured DeviceProfile JSON (launch.profile); "
+                         "calibrates the plan search's cost model to this "
+                         "host instead of the analytic constants")
     args = ap.parse_args()
     if args.autotune_cache_dir:
         import os
@@ -126,7 +130,8 @@ def main() -> None:
         plan_path=args.plan, strategy=name, save_plan=args.save_plan,
         train_seq=args.seq, train_batch=args.batch,
         train_stages=args.pipeline_stages,
-        train_microbatches=args.microbatches)
+        train_microbatches=args.microbatches,
+        profile_path=args.device_profile)
     plan = pplan.plan_for("train")
     train_stages = pplan.stage_for("train")
     if train_stages.num_stages > 1:

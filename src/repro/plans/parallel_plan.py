@@ -19,6 +19,7 @@ silently mis-shard or crash deep inside jit).
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
 import tempfile
@@ -146,17 +147,37 @@ def _stages_from_json(d: dict) -> StageAssignment:
 def _mesh_to_json(mesh: MeshSpec | None) -> dict | None:
     if mesh is None:
         return None
-    return {"chip": mesh.chip.name,
-            "axes": [{"name": a.name, "size": a.size, "bw": a.bw}
-                     for a in mesh.axes]}
+    out = {"chip": mesh.chip.name,
+           "axes": [{"name": a.name, "size": a.size, "bw": a.bw,
+                     **({"curves": [list(c) for c in a.curves]}
+                        if a.curves else {})}
+                    for a in mesh.axes]}
+    # a profile-calibrated chip differs from the registry entry only in
+    # its efficiencies; persist them so a loaded plan re-prices the same
+    base = _CHIPS.get(mesh.chip.name)
+    if base is not None and (mesh.chip.mxu_efficiency != base.mxu_efficiency
+                             or mesh.chip.hbm_efficiency
+                             != base.hbm_efficiency):
+        out["chip_efficiencies"] = {"mxu": mesh.chip.mxu_efficiency,
+                                    "hbm": mesh.chip.hbm_efficiency}
+    return out
 
 
 def _mesh_from_json(d: dict | None) -> MeshSpec | None:
     if d is None:
         return None
-    axes = tuple(AxisSpec(a["name"], int(a["size"]), float(a.get("bw", ICI_BW)))
-                 for a in d["axes"])
-    return MeshSpec(axes=axes, chip=_CHIPS.get(d.get("chip"), TPU_V5E))
+    axes = tuple(
+        AxisSpec(a["name"], int(a["size"]), float(a.get("bw", ICI_BW)),
+                 curves=tuple((str(k), float(al), float(bw))
+                              for k, al, bw in a.get("curves", ())))
+        for a in d["axes"])
+    chip = _CHIPS.get(d.get("chip"), TPU_V5E)
+    eff = d.get("chip_efficiencies")
+    if eff:
+        chip = dataclasses.replace(chip,
+                                   mxu_efficiency=float(eff["mxu"]),
+                                   hbm_efficiency=float(eff["hbm"]))
+    return MeshSpec(axes=axes, chip=chip)
 
 
 # --------------------------------------------------------------------------- #

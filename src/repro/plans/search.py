@@ -37,6 +37,7 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
                       q_tokens: int | None = None,
                       num_stages: int = 0, microbatches: int = 8,
                       options: SearchOptions | None = None,
+                      profile=None,
                       ) -> tuple[ModelPlan, StageAssignment | None, dict]:
     """Search one phase; returns (realized plan, stage assignment or
     ``None`` when the phase is unstaged, provenance dict).
@@ -46,7 +47,9 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
     routes the phase through the two-level pipeline search
     (:func:`~repro.core.stages.find_staged_strategy`): >1 forces that
     stage count, <0 auto-searches up to ``options.max_stages``; 0/1 keep
-    today's single-level search bit-for-bit."""
+    today's single-level search bit-for-bit.  ``profile`` (a measured
+    :class:`~repro.profiling.DeviceProfile`) calibrates the cost model
+    the search prices against; the provenance records its fingerprint."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
                         kv_tokens=kv_tokens, q_tokens=q_tokens)
     graph = export_graph(arch, shape)
@@ -60,7 +63,7 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
             graph, mesh, n_units=arch.n_units, phase=phase, options=options,
             num_stages=num_stages if num_stages > 1 else None,
             max_stages=auto_max if auto_max > 1 else None,
-            microbatches=microbatches)
+            microbatches=microbatches, profile=profile)
         strat, stages = staged.strategy, staged.stages
         pipe = staged.meta.get("pipeline", {})
         prov = {
@@ -76,8 +79,11 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
             "stage_costs_s": list(staged.stage_costs),
             "pipeline_xfer_s": pipe.get("xfer_s"),
         }
+        if profile is not None:
+            prov["device_profile"] = profile.fingerprint()
         return strategy_to_plan(strat, arch), stages, prov
-    strat = find_strategy(graph, mesh, phase=phase, options=options)
+    strat = find_strategy(graph, mesh, phase=phase, options=options,
+                          profile=profile)
     prov = {
         "phase": phase,
         "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
@@ -85,6 +91,8 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
         "cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
     }
+    if profile is not None:
+        prov["device_profile"] = profile.fingerprint()
     return strategy_to_plan(strat, arch), None, prov
 
 
@@ -114,7 +122,8 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                         decode_q_tokens: int | None = None,
                         train_stages: int = 0,
                         train_microbatches: int = 8,
-                        options: SearchOptions | None = None) -> ParallelPlan:
+                        options: SearchOptions | None = None,
+                        profile=None) -> ParallelPlan:
     """Build a ParallelPlan for ``phases`` under one named strategy.
 
     Phase shapes: train prices ``(train_batch, train_seq)``; prefill a
@@ -135,6 +144,12 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     ``options.max_stages``); serve phases stay single-stage — token-level
     decode pipelining is a named follow-up.  Requires
     ``strategy="searched"``.
+
+    ``profile`` — a measured :class:`~repro.profiling.DeviceProfile` —
+    calibrates every searched phase's cost model; the plan's meta records
+    the profile fingerprint so a loaded plan declares which hardware
+    measurement shaped it.  Baselines ignore it (their configs are not
+    cost-driven).
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; "
@@ -148,6 +163,10 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             f"(got {strategy!r}); baselines are single-stage")
     if mesh is None or strategy == "uniform":
         return ParallelPlan.uniform(arch, phases=tuple(phases), mesh=mesh)
+    if profile is not None and strategy == "searched":
+        # store (and search under) the calibrated mesh, so the plan JSON
+        # round-trips the measured curves and chip efficiencies
+        mesh = profile.calibrate_mesh(mesh)
 
     shapes = {
         "train": (train_seq, train_batch),
@@ -166,7 +185,8 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             plans[phase], st, phase_meta[phase] = search_phase_plan(
                 arch, mesh, phase, seq_len=seq_len, batch=batch,
                 kv_tokens=kv, q_tokens=qt, options=options,
-                num_stages=ns, microbatches=train_microbatches)
+                num_stages=ns, microbatches=train_microbatches,
+                profile=profile)
             if st is not None and st.num_stages > 1:
                 stages[phase] = st
         else:
@@ -175,11 +195,13 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                 kv_tokens=kv, q_tokens=qt)
     import jax
 
+    meta = {"strategy": strategy, "phases": phase_meta,
+            "jax": jax.__version__}
+    if profile is not None and strategy == "searched":
+        meta["device_profile"] = profile.fingerprint()
     return ParallelPlan(
         arch=arch_fingerprint(arch), phases=plans, mesh=mesh,
-        stages=stages,
-        meta={"strategy": strategy, "phases": phase_meta,
-              "jax": jax.__version__})
+        stages=stages, meta=meta)
 
 
 def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
@@ -193,6 +215,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                  train_stages: int = 0,
                  train_microbatches: int = 8,
                  options: SearchOptions | None = None,
+                 profile_path: str = "",
                  log=print) -> ParallelPlan:
     """The plan tri-logic every driver shares: ``plan_path`` (load,
     arch-checked) beats ``strategy`` (build the requested ``phases``);
@@ -203,7 +226,18 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     non-uniform ``strategy`` on a single device (``mesh=None``) reports
     the degrade to uniform — the saved file's meta records what was
     actually built, so downstream ``--plan`` runs see the truth.
+
+    ``profile_path`` (the drivers' ``--device-profile``) loads a measured
+    :class:`~repro.profiling.DeviceProfile` and calibrates the searched
+    cost model from it; a loaded ``plan_path`` notes when the plan was
+    searched under a different (or no) profile than the one given.
     """
+    profile = None
+    if profile_path:
+        from repro.profiling import load_profile
+        profile = load_profile(profile_path)
+        log(f"plan: device profile {profile_path} "
+            f"[{profile.device_kind}] calibrates the cost model")
     if plan_path:
         plan = ParallelPlan.load(plan_path, arch=arch)
         log(f"plan: loaded [{plan.strategy_name}] from {plan_path}")
@@ -223,6 +257,16 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             if st.num_stages > 1:
                 log(f"plan: {phase} is pipeline-staged "
                     f"(S={st.num_stages}, M={st.microbatches})")
+        if profile is not None:
+            searched_under = plan.meta.get("device_profile")
+            if searched_under is None:
+                log("plan: note — loaded plan was searched without a "
+                    "device profile; --device-profile only affects newly "
+                    "built plans")
+            elif searched_under.get("device_kind") != profile.device_kind:
+                log(f"plan: note — loaded plan was searched under a "
+                    f"{searched_under.get('device_kind')!r} profile but "
+                    f"this one measures {profile.device_kind!r}")
     else:
         if mesh is None and strategy != "uniform":
             log(f"plan: single device — strategy {strategy!r} degrades "
@@ -234,7 +278,8 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             decode_kv_tokens=decode_kv_tokens,
             decode_q_tokens=decode_q_tokens,
             train_stages=train_stages,
-            train_microbatches=train_microbatches, options=options)
+            train_microbatches=train_microbatches, options=options,
+            profile=profile)
         for phase, pm in plan.meta.get("phases", {}).items():
             cost = pm.get("cost_s")
             if cost is not None:

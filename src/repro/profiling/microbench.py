@@ -1,0 +1,320 @@
+"""Microbenchmarks that measure the numbers the cost model guesses.
+
+Three measurement families, all with the same timing discipline (jitted
+callables, warmup iterations discarded, ``jax.block_until_ready`` around
+every timed call, median of ``repeats``):
+
+* **chip roofline** — dense-matmul FLOP/s over a size ladder (best rung
+  wins: the cost model's ``eff_flops`` is the *achievable* rate) and HBM
+  stream bandwidth from an elementwise read+write kernel;
+* **kernel factors** — wall time of every eligible dispatch backend per
+  (op, shape class) through the public :mod:`repro.kernels.ops` wrappers,
+  so the measurement exercises exactly the jit/dispatch path production
+  uses;
+* **collectives** — all-reduce / reduce-scatter / all-gather / all-to-all
+  over a message-size ladder on each requested mesh axis, executed with
+  :func:`repro.compat.shard_map` over the real device mesh and fitted to
+  an alpha-beta curve ``t = alpha + wire_bytes / bw`` per (axis, kind).
+
+Everything degrades gracefully: an axis with too few devices, a backend
+that refuses the shape, or a collective the installed JAX cannot lower is
+skipped (the profile simply lacks that field and calibration falls back
+to the analytic constant).
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro import compat
+from repro.core.device import COLLECTIVE_KINDS
+from repro.kernels import dispatch, ops
+
+from .profile import (CollectiveCurve, DeviceProfile, fit_alpha_beta,
+                      sanitize_device_kind)
+
+log = logging.getLogger(__name__)
+
+KiB = 1024
+MiB = 1024 * 1024
+
+#: Default size ladders.  ``--smoke`` presets (see launch.profile) shrink
+#: these so a CI runner finishes in seconds.
+MATMUL_SIZES = (256, 512, 1024, 2048)
+STREAM_BYTES = (4 * MiB, 16 * MiB, 64 * MiB)
+COLLECTIVE_BYTES = (64 * KiB, 256 * KiB, 1 * MiB, 4 * MiB)
+
+#: Dispatcher ops the kernel sweep times by default; "interpret" (Pallas
+#: interpreter) is excluded — orders of magnitude off any real backend.
+KERNEL_OPS = ("flash_attention", "decode_attention", "mamba_scan", "wkv6",
+              "moe_dispatch_combine")
+SKIP_BACKENDS = ("interpret",)
+
+
+# --------------------------------------------------------------------------- #
+# timing discipline
+# --------------------------------------------------------------------------- #
+def median_time(fn, *args, repeats: int = 5, warmup: int = 2) -> float:
+    """Median wall seconds of ``fn(*args)`` with warmup and full-device
+    synchronization (``block_until_ready``) inside the timed region."""
+    for _ in range(max(0, warmup)):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(max(1, repeats)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    n = len(ts)
+    mid = n // 2
+    return ts[mid] if n % 2 else 0.5 * (ts[mid - 1] + ts[mid])
+
+
+# --------------------------------------------------------------------------- #
+# chip roofline
+# --------------------------------------------------------------------------- #
+def measure_matmul_flops(sizes=MATMUL_SIZES, *, dtype=jnp.bfloat16,
+                         repeats: int = 5, warmup: int = 2) -> float:
+    """Best achieved dense-matmul FLOP/s over the size ladder."""
+    f = jax.jit(lambda a, b: a @ b)
+    best = 0.0
+    for n in sizes:
+        a = jnp.ones((n, n), dtype=dtype)
+        b = jnp.ones((n, n), dtype=dtype)
+        t = median_time(f, a, b, repeats=repeats, warmup=warmup)
+        best = max(best, 2.0 * n**3 / t)
+    return best
+
+
+def measure_hbm_bw(sizes=STREAM_BYTES, *, repeats: int = 5,
+                   warmup: int = 2) -> float:
+    """Best achieved HBM stream bandwidth (bytes/s) from an elementwise
+    read+write kernel: each element is read once and written once."""
+    f = jax.jit(lambda x: x * 2.0 + 1.0)
+    best = 0.0
+    for nbytes in sizes:
+        x = jnp.zeros(max(1, int(nbytes) // 4), jnp.float32)
+        t = median_time(f, x, repeats=repeats, warmup=warmup)
+        best = max(best, 2.0 * x.size * 4 / t)
+    return best
+
+
+# --------------------------------------------------------------------------- #
+# kernel sweep (through the production dispatch path)
+# --------------------------------------------------------------------------- #
+def _kernel_case(op: str, shape_class: str):
+    """``(callable, args, kwargs)`` for one (op, shape class); the shapes
+    follow the canonical signatures documented in kernels.dispatch."""
+    big = shape_class == "base"
+    B = 2 if big else 1
+    S = 256 if big else 128
+    H, D = (8, 64) if big else (4, 64)
+    if op == "flash_attention":
+        q = jnp.ones((B, H, S, D), jnp.float32)
+        return ops.flash_attention, (q, q, q), {}
+    if op == "decode_attention":
+        q = jnp.ones((B, H, 1, D), jnp.float32)
+        kv = jnp.ones((B, H, S, D), jnp.float32)
+        return ops.decode_attention, (q, kv, kv, jnp.int32(S)), {}
+    if op == "mamba_scan":
+        di, N = (256, 16) if big else (128, 8)
+        dt = jnp.full((B, S, di), 0.01, jnp.float32)
+        Bm = jnp.ones((B, S, N), jnp.float32)
+        x = jnp.ones((B, S, di), jnp.float32)
+        A = -jnp.ones((di, N), jnp.float32)
+        Dk = jnp.ones((di,), jnp.float32)
+        return ops.mamba_scan, (dt, Bm, Bm, x, A, Dk), {}
+    if op == "wkv6":
+        N = 64
+        r = jnp.ones((B, H, S, N), jnp.float32) * 0.1
+        w = jnp.full((B, H, S, N), -1.0, jnp.float32)
+        u = jnp.ones((H, N), jnp.float32) * 0.1
+        return ops.wkv6, (r, r, r, w, u), {}
+    if op == "moe_dispatch_combine":
+        Dm, F, E, K = (256, 512, 8, 2) if big else (128, 256, 4, 2)
+        x = jnp.ones((B, S, Dm), jnp.float32)
+        gate = jnp.full((B, S, K), 1.0 / K, jnp.float32)
+        idx = (jnp.arange(B * S * K, dtype=jnp.int32).reshape(B, S, K)) % E
+        wi = jnp.ones((E, Dm, F), jnp.float32) * 0.01
+        wo = jnp.ones((E, F, Dm), jnp.float32) * 0.01
+        cap = (S * K + E - 1) // E  # capacity factor ~1.0, no drops
+        return ops.moe_dispatch_combine, (x, gate, idx, wi, wi, wo), {
+            "capacity": cap}
+    raise KeyError(f"no microbench case for kernel op {op!r}")
+
+
+def measure_kernels(ops_to_time=KERNEL_OPS, shape_classes=("small",), *,
+                    skip_backends=SKIP_BACKENDS, repeats: int = 5,
+                    warmup: int = 2) -> dict[tuple[str, str, str], float]:
+    """Median seconds per (op, backend, shape_class) for every registered
+    backend eligible on this platform and shape."""
+    platform = compat.default_platform()
+    out: dict[tuple[str, str, str], float] = {}
+    for op in ops_to_time:
+        for shape_class in shape_classes:
+            fn, args, kwargs = _kernel_case(op, shape_class)
+            for backend, impl in sorted(dispatch.backends(op).items()):
+                if backend in skip_backends:
+                    continue
+                if not impl.eligible(platform, args, kwargs, auto=False):
+                    continue
+                try:
+                    t = median_time(
+                        lambda *a: fn(*a, backend=backend, **kwargs),
+                        *args, repeats=repeats, warmup=warmup)
+                except Exception:
+                    log.warning("kernel microbench %s/%s/%s failed; skipped",
+                                op, backend, shape_class, exc_info=True)
+                    continue
+                out[(op, backend, shape_class)] = t
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# collective sweep
+# --------------------------------------------------------------------------- #
+def _collective_fn(kind: str, axis: str):
+    if kind == "all_reduce":
+        return lambda x: lax.psum(x, axis)
+    if kind == "reduce_scatter":
+        return lambda x: lax.psum_scatter(x, axis, scatter_dimension=0,
+                                          tiled=True)
+    if kind == "all_gather":
+        return lambda x: lax.all_gather(x, axis, tiled=True)
+    if kind == "all_to_all":
+        return lambda x: lax.all_to_all(x, axis, split_axis=0, concat_axis=0,
+                                        tiled=True)
+    raise KeyError(f"unknown collective kind {kind!r}")
+
+
+def _wire_bytes(kind: str, size: int, nbytes: float) -> float:
+    """Per-chip wire bytes for one ring collective stage — the same
+    formulas :class:`repro.core.device.MeshSpec` prices with, so the
+    fitted curve and the pricer speak the same units."""
+    s = size
+    if kind == "all_reduce":
+        return 2.0 * (s - 1) / s * nbytes
+    if kind == "reduce_scatter":
+        return (s - 1) / s * nbytes
+    if kind == "all_gather":
+        return (s - 1) * nbytes          # nbytes is the per-chip shard
+    if kind == "all_to_all":
+        return (s - 1) / s * nbytes
+    raise KeyError(kind)
+
+
+def measure_collectives(axes, sizes_bytes=COLLECTIVE_BYTES, *,
+                        kinds=COLLECTIVE_KINDS, repeats: int = 5,
+                        warmup: int = 2) -> dict[str, dict[str, CollectiveCurve]]:
+    """Alpha-beta curves per (mesh axis, collective kind).
+
+    ``axes`` is ``{name: size}``; each axis is measured over a dedicated
+    1-axis device mesh built from the first ``size`` local devices (the
+    TPU ICI analogue would pin topology-adjacent chips; on a virtual CPU
+    mesh all device subsets are equivalent).  Axes with size 1 or more
+    devices than available are skipped.
+    """
+    devices = jax.devices()
+    out: dict[str, dict[str, CollectiveCurve]] = {}
+    for name, size in dict(axes).items():
+        size = int(size)
+        if size <= 1:
+            continue
+        if size > len(devices):
+            log.warning("axis %s=%d exceeds %d local devices; skipped",
+                        name, size, len(devices))
+            continue
+        mesh = compat.make_mesh((size,), (name,), devices=devices[:size])
+        curves: dict[str, CollectiveCurve] = {}
+        for kind in kinds:
+            fn = _collective_fn(kind, name)
+            wires: list[float] = []
+            times: list[float] = []
+            for nbytes in sizes_bytes:
+                # each chip holds a ladder-sized local buffer — the same
+                # per-chip quantity the MeshSpec pricer takes; the global
+                # element count is padded to a multiple of size^2 so every
+                # tiled collective's divisibility constraint holds
+                g = max(size * size, (int(nbytes) // 4) * size)
+                g -= g % (size * size)
+                per_chip = g * 4.0 / size
+                x = jnp.ones((g,), jnp.float32)
+                out_spec = P() if kind == "all_reduce" else P(name)
+                try:
+                    sharded = compat.shard_map(
+                        fn, mesh=mesh, in_specs=P(name), out_specs=out_spec)
+                    timed = jax.jit(sharded)
+                    t = median_time(timed, x, repeats=repeats, warmup=warmup)
+                except Exception:
+                    log.warning("collective microbench %s over %s failed; "
+                                "skipped", kind, name, exc_info=True)
+                    wires = []
+                    break
+                wires.append(_wire_bytes(kind, size, per_chip))
+                times.append(t)
+            if len(wires) >= 2 and max(wires) > min(wires):
+                alpha, bw = fit_alpha_beta(wires, times)
+                curves[kind] = CollectiveCurve(
+                    kind=kind, alpha=alpha, bw=bw,
+                    sizes=tuple(wires), times=tuple(times))
+        if curves:
+            out[name] = curves
+    return out
+
+
+# --------------------------------------------------------------------------- #
+# top-level profile build
+# --------------------------------------------------------------------------- #
+def device_kind() -> str:
+    try:
+        kind = jax.devices()[0].device_kind
+    except Exception:
+        kind = compat.default_platform()
+    return sanitize_device_kind(kind)
+
+
+def build_profile(*, axes=None, matmul_sizes=MATMUL_SIZES,
+                  stream_sizes=STREAM_BYTES,
+                  collective_sizes=COLLECTIVE_BYTES,
+                  kernel_ops=KERNEL_OPS, shape_classes=("small",),
+                  skip_backends=SKIP_BACKENDS,
+                  repeats: int = 5, warmup: int = 2) -> DeviceProfile:
+    """Measure everything and assemble a :class:`DeviceProfile`.
+
+    ``axes`` (``{name: size}``) selects the mesh axes to sweep
+    collectives over; ``None`` or empty skips the collective sweep (a
+    single-device host has no collectives to measure).
+    """
+    flops = measure_matmul_flops(matmul_sizes, repeats=repeats, warmup=warmup)
+    hbm = measure_hbm_bw(stream_sizes, repeats=repeats, warmup=warmup)
+    kernels = measure_kernels(kernel_ops, shape_classes,
+                              skip_backends=skip_backends,
+                              repeats=repeats, warmup=warmup)
+    coll = measure_collectives(axes or {}, collective_sizes,
+                               repeats=repeats, warmup=warmup)
+    return DeviceProfile(
+        device_kind=device_kind(),
+        measured_flops=flops,
+        measured_hbm_bw=hbm,
+        collectives=coll,
+        kernel_times=kernels,
+        meta={
+            "jax": jax.__version__,
+            "platform": compat.default_platform(),
+            "num_devices": len(jax.devices()),
+            "axes": {k: int(v) for k, v in dict(axes or {}).items()},
+            "repeats": int(repeats),
+            "warmup": int(warmup),
+            "matmul_sizes": [int(s) for s in matmul_sizes],
+            "stream_bytes": [int(s) for s in stream_sizes],
+            "collective_bytes": [int(s) for s in collective_sizes],
+            "shape_classes": list(shape_classes),
+            "created_unix": time.time(),
+        },
+    )

@@ -6,8 +6,7 @@ live on :class:`ServeConfig`; the bare-kwarg ``ServeEngine(...)`` form
 is deprecated."""
 
 from .config import ServeConfig
-from .engine import (ServeEngine, copy_block, reset_slot_state, write_slot,
-                     write_slot_paged)
+from .engine import ServeEngine, copy_block, reset_slot_state, write_slot
 from .fns import make_serve_fns
 from .paging import (BlockAllocator, PoolExhausted, PrefixCache,
                      blocks_for_request)
@@ -16,5 +15,4 @@ from .scheduler import Completion, Request, SlotScheduler, SlotState
 __all__ = ["BlockAllocator", "Completion", "PoolExhausted", "PrefixCache",
            "Request", "ServeConfig", "ServeEngine", "SlotScheduler",
            "SlotState", "blocks_for_request", "copy_block",
-           "make_serve_fns", "reset_slot_state", "write_slot",
-           "write_slot_paged"]
+           "make_serve_fns", "reset_slot_state", "write_slot"]

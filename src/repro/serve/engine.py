@@ -109,16 +109,6 @@ def write_slot(pool: dict, row: dict, slot, block_ids=None) -> dict:
     return jax.tree_util.tree_map_with_path(one, pool, row)
 
 
-def write_slot_paged(pool: dict, row: dict, slot, block_ids) -> dict:
-    """Deprecated alias for ``write_slot(pool, row, slot, block_ids)``
-    — the dense and paged admission writes are one signature now."""
-    warnings.warn(
-        "write_slot_paged is deprecated; use "
-        "write_slot(pool, row, slot, block_ids=...)",
-        DeprecationWarning, stacklevel=2)
-    return write_slot(pool, row, slot, block_ids)
-
-
 def copy_block(pool: dict, src, dst) -> dict:
     """Copy-on-write device kernel: duplicate physical KV block ``src``
     into ``dst`` across every unit's K and V pool.  Issued by the engine

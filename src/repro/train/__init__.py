@@ -1,37 +1,10 @@
 """Training subsystem.  Canonical exports: :class:`TrainConfig` and
 :func:`make_train_step`.
 
-``make_serve_fns`` (now ``repro.serve.fns``) and the sharding
-realization (now ``repro.plans.shardings``) are still importable from
-here for one release, but resolve lazily through a module
-``__getattr__`` that emits ``DeprecationWarning`` — update imports to
-the canonical paths."""
-
-import warnings
+Serving fns live in ``repro.serve`` and the sharding realization in
+``repro.plans.shardings`` — the one-release ``repro.train`` re-export
+shims are gone."""
 
 from .step import TrainConfig, make_train_step
 
-_MOVED = {
-    "make_serve_fns": "repro.serve.fns",
-    "batch_pspecs": "repro.plans.shardings",
-    "cache_pspecs": "repro.plans.shardings",
-    "dominant_unit_plan": "repro.plans.shardings",
-    "param_pspecs": "repro.plans.shardings",
-    "to_shardings": "repro.plans.shardings",
-}
-
-__all__ = ["TrainConfig", "batch_pspecs", "cache_pspecs",
-           "dominant_unit_plan", "make_serve_fns", "make_train_step",
-           "param_pspecs", "to_shardings"]
-
-
-def __getattr__(name):
-    home = _MOVED.get(name)
-    if home is None:
-        raise AttributeError(f"module {__name__!r} has no attribute "
-                             f"{name!r}")
-    warnings.warn(
-        f"repro.train.{name} is deprecated; import {name} from {home}",
-        DeprecationWarning, stacklevel=2)
-    import importlib
-    return getattr(importlib.import_module(home), name)
+__all__ = ["TrainConfig", "make_train_step"]

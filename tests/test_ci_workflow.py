@@ -149,6 +149,34 @@ def test_workflow_bench_job_searches_staged_train_plan():
     assert "--train-microbatches" in gated["run"]
 
 
+def test_workflow_bench_job_measures_and_feeds_a_device_profile():
+    """The bench-smoke job must measure a DeviceProfile on the runner
+    (launch.profile --smoke under forced virtual devices, so the
+    collective sweep is non-degenerate), feed it into the *gated*
+    serving bench via --device-profile (so cost_model_rel_error lands in
+    the report compare_bench watches), and upload the profile JSON."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    profile_steps = [s for s in job["steps"]
+                     if "repro.launch.profile" in s.get("run", "")]
+    assert profile_steps, "no profile-smoke step"
+    prun = profile_steps[0]["run"]
+    assert "--smoke" in prun
+    assert "xla_force_host_platform_device_count" in prun
+    assert "--out DEVICE_profile.json" in prun
+    gated = next(s for s in job["steps"]
+                 if "--out BENCH_serving.json" in s.get("run", ""))
+    assert "--device-profile DEVICE_profile.json" in gated["run"]
+    # the profile must exist before the bench consumes it
+    names = [s.get("name", "") for s in job["steps"]]
+    prof_i = job["steps"].index(profile_steps[0])
+    bench_i = job["steps"].index(gated)
+    assert prof_i < bench_i, names
+    uploads = [s for s in job["steps"]
+               if str(s.get("uses", "")).startswith("actions/upload-artifact")]
+    assert uploads and "DEVICE_profile.json" in uploads[0]["with"]["path"]
+
+
 def _compat_grep(tree: Path) -> int:
     """The exact gate the lint job runs, pointed at ``tree``/src."""
     script = ('hits="$(grep -rn "CompilerParams\\|AxisType" src/ '
@@ -190,15 +218,17 @@ def test_compare_bench_gate_logic():
             "prefill_tokens_saved": 6144,
             "stage_count": 2,
             "pipeline_bubble_frac": 0.111,
+            "cost_model_rel_error": 0.40,
             "modes": {"continuous": {"kv_bytes_reserved": 1000,
                                      "itl_p99_ms": 40.0}}}
 
     def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55,
-            hit=0.71, saved=6144, stages=2, bubble=0.111):
+            hit=0.71, saved=6144, stages=2, bubble=0.111, cmerr=0.40):
         return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
                 "chunked_itl_p99_ratio": ratio,
                 "prefix_hit_rate": hit, "prefill_tokens_saved": saved,
                 "stage_count": stages, "pipeline_bubble_frac": bubble,
+                "cost_model_rel_error": cmerr,
                 "modes": {"continuous": {"kv_bytes_reserved": kv,
                                          "itl_p99_ms": itl}}}
 
@@ -242,6 +272,13 @@ def test_compare_bench_gate_logic():
     assert compare(base, cur(bubble=0.09), 0.15) == []   # shrinking is fine
     # stage_count is informational: a move never fails the gate
     assert compare(base, cur(stages=4), 0.15) == []
+    # calibration error is noise-floored at 1.0: a timed-metric swing
+    # that stays under 100% error is runner jitter...
+    assert compare(base, cur(cmerr=0.60), 0.15) == []
+    # ...but growth past both tolerance and floor means the measured
+    # profile stopped predicting the host
+    assert any("cost_model_rel_error" in f
+               for f in compare(base, cur(cmerr=1.4), 0.15))
     # a metric the baseline proves existed must not vanish silently
     gone = cur()
     del gone["kv_reserved_frac"]

@@ -218,7 +218,7 @@ def test_block_allocator_lazy_alloc_and_trash_block():
         BlockAllocator(1, 4, max_batch=1, pages_per_slot=1)
 
 
-def test_write_slot_paged_overwrites_prompt_blocks_and_state_row():
+def test_paged_write_slot_overwrites_prompt_blocks_and_state_row():
     """Admission must fully overwrite every prompt block and the slot's
     recurrent-state row, and touch nothing else — the paged analogue of
     the dense full-row-overwrite hygiene guarantee (one unified

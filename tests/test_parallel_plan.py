@@ -158,44 +158,40 @@ def test_uniform_parallel_plan_matches_model_plan():
     assert pp.strategy_name == "uniform"
 
 
-def test_deprecated_aliases_warn_and_still_resolve():
-    """PR contract: existing imports keep working for one release after
-    the relocation of shardings into repro.plans and make_serve_fns into
-    repro.serve — but every access through the old ``repro.train`` paths
-    announces itself with a DeprecationWarning."""
+def test_deprecated_train_aliases_are_gone():
+    """The one-release ``repro.train`` re-export shims completed their
+    deprecation cycle: the old names no longer resolve (an import typo
+    should fail loudly, not resurrect the alias), while the canonical
+    homes — ``repro.plans`` for the sharding realization and
+    ``repro.serve`` for the serve fns — keep them."""
     import importlib
     import sys
     import warnings
+
+    import pytest
 
     import repro.plans as plans
     import repro.serve as serve
     import repro.train as train
 
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        assert train.make_serve_fns is serve.make_serve_fns
-        for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
-                     "dominant_unit_plan", "to_shardings"):
-            assert getattr(train, name) is getattr(plans, name)
-    assert len(w) == 6
-    assert all(issubclass(x.category, DeprecationWarning) for x in w)
-    assert "repro.serve.fns" in str(w[0].message)
+    for name in ("make_serve_fns", "param_pspecs", "batch_pspecs",
+                 "cache_pspecs", "dominant_unit_plan", "to_shardings"):
+        with pytest.raises(AttributeError):
+            getattr(train, name)
+    assert sorted(train.__all__) == ["TrainConfig", "make_train_step"]
 
-    # the module-shim form: importing repro.train.shardings itself warns
+    # the module shim is gone too
     sys.modules.pop("repro.train.shardings", None)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        old_shardings = importlib.import_module("repro.train.shardings")
-    assert any(issubclass(x.category, DeprecationWarning) and
-               "repro.plans.shardings" in str(x.message) for x in w)
-    for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
-                 "dominant_unit_plan", "to_shardings"):
-        assert getattr(old_shardings, name) is getattr(plans, name)
+    with pytest.raises(ImportError):
+        importlib.import_module("repro.train.shardings")
 
-    # canonical access paths stay silent
+    # canonical access paths resolve, silently
     with warnings.catch_warnings(record=True) as w:
         warnings.simplefilter("always")
         assert train.TrainConfig is not None
         assert train.make_train_step is not None
         assert serve.make_serve_fns is not None
+        for name in ("param_pspecs", "batch_pspecs", "cache_pspecs",
+                     "dominant_unit_plan", "to_shardings"):
+            assert getattr(plans, name) is not None
     assert not [x for x in w if issubclass(x.category, DeprecationWarning)]

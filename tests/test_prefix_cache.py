@@ -373,19 +373,22 @@ def test_serve_engine_legacy_kwargs_warn_and_match_config():
     assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
 
 
-def test_write_slot_paged_is_deprecated_alias():
-    from repro.serve import write_slot, write_slot_paged
+def test_write_slot_paged_alias_is_gone():
+    """The deprecated ``write_slot_paged`` alias completed its cycle:
+    only the unified ``write_slot(pool, row, slot, block_ids=...)``
+    remains, and it still performs the paged admission write."""
+    import repro.serve as serve
+    import repro.serve.engine as engine_mod
 
+    with pytest.raises(ImportError):
+        from repro.serve import write_slot_paged  # noqa: F401
+    assert not hasattr(engine_mod, "write_slot_paged")
+    assert "write_slot_paged" not in serve.__all__
+
+    from repro.serve import write_slot
     arch = _arch("llama3_2_1b")
     pool = lm.init_paged_cache(arch, 4, BS, 2, jnp.float32)
     row = lm.init_cache(arch, 1, BS, jnp.float32)
     ids = jnp.asarray([1], jnp.int32)
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        legacy = write_slot_paged(pool, row, 1, ids)
-    assert any(issubclass(x.category, DeprecationWarning)
-               and "write_slot" in str(x.message) for x in w)
-    pool2 = lm.init_paged_cache(arch, 4, BS, 2, jnp.float32)
-    unified = write_slot(pool2, row, 1, block_ids=ids)
-    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(unified)):
-        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    written = write_slot(pool, row, 1, block_ids=ids)
+    assert jax.tree.leaves(written)
