@@ -39,7 +39,16 @@ fails when a watched metric regresses by more than ``--max-regression``:
 * ``cost_model_rel_error`` — median per-layer relative error of the
   profile-calibrated cost model against timed equivalents
   (``--device-profile``); growth past the tolerance *and* the 1.0 noise
-  floor means the calibration pipeline drifted off this hardware.
+  floor means the calibration pipeline drifted off this hardware;
+* ``quant_kv_reserved_frac`` — int8/fp bytes physically reserved by the
+  quantized paged pool (``--kv-quant int8`` runs); deterministic bytes
+  (0.25 + 1/head_dim on an f32 pool), gates strictly — growth means the
+  quantized pool quietly re-widened;
+* ``quant_logit_agreement`` — teacher-forced max logit delta of the
+  int8 pool against a dense fp cache on a fixed probe stream; carries a
+  0.05 noise floor (well above the smoke arch's ~7e-3 quantization
+  noise), so growth past both floor and tolerance means the
+  quantize/dequantize path genuinely lost precision.
 
 A missing baseline (first run, new cache key, metric added since) passes
 with a note — the gate tightens as the trajectory accumulates, it never
@@ -85,6 +94,16 @@ WATCHED = (
     # predicting this host.  Timed on a shared runner, so it carries a
     # 1.0 noise floor — only fails while the model is also off by >100%.
     ("cost_model_rel_error", "down", 1.0),
+    # int8-quantized paged pool (--kv-quant int8 runs): the int8/fp
+    # reservation ratio is deterministic bytes (int8 payload + f32
+    # scales over the f32 pool = 0.25 + 1/head_dim; the smoke arch's
+    # head_dim 4 gives 0.50) so it gates strictly; the teacher-forced
+    # max logit delta is pure numerics on a fixed probe stream but
+    # float-library-sensitive, so it carries a 0.05 noise floor — only
+    # fails while the error is also genuinely above quantization-noise
+    # scale (the smoke arch measures ~7e-3).
+    ("quant_kv_reserved_frac", "down", None),
+    ("quant_logit_agreement", "down", 0.05),
 )
 
 #: Reported for context, never gated: a stage-count move is a strategy

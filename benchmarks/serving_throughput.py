@@ -35,6 +35,16 @@ copy-on-write prefix cache serves it from shared blocks — reported as
 ``prefill_tokens_saved`` (prompt tokens never re-prefilled), both gated
 in CI alongside the other serving metrics.
 
+``--kv-quant int8`` adds a ``continuous_int8`` mode — the same chunked
+continuous engine on an int8 paged pool (per-row f32 scales riding the
+block table) — and three top-level quantization metrics:
+``quant_kv_reserved_frac`` (int8/fp bytes physically reserved = int8
+payload + f32 scales over an f32 pool, 0.25 + 1/head_dim —
+the smoke arch's head_dim 4 gives 0.50), ``quant_speedup`` (int8/fp
+tok/s, informational) and ``quant_logit_agreement`` (teacher-forced max
+absolute logit delta between a dense fp cache and the int8 paged pool —
+pure quantization numerics, gated against a noise floor in CI).
+
 ``--train-stages N`` additionally prices a pipeline-staged *train* plan
 (two-level search, :func:`repro.plans.search.search_phase_plan`) on a
 synthetic 8-device mesh — pure cost model, no extra runtime — and
@@ -168,6 +178,35 @@ def run_mode(engine, trace: list[dict]) -> dict:
     return metrics
 
 
+def quant_logit_probe(mod, params, arch, vocab: int, *, tokens: int = 48,
+                      block_size: int = 16, seed: int = 3) -> float:
+    """Teacher-forced numerics probe for the int8 paged pool: feed one
+    random token stream through a dense fp cache and an int8 paged cache
+    (identity block table, so both see the same logical KV) and return
+    the max absolute logit delta over the stream.  This is the
+    quantization error *alone* — no scheduling, no admission — which is
+    what the CI gate can hold to a noise floor."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(1, vocab, tokens)
+    pages = -(-tokens // block_size)
+    dense = mod.init_cache(arch, 1, pages * block_size, jnp.float32)
+    quant = mod.init_paged_cache(arch, pages + 1, block_size, 1,
+                                 jnp.float32, kv_quant="int8")
+    bt = jnp.arange(1, pages + 1, dtype=jnp.int32)[None, :]
+    delta = 0.0
+    for i, t in enumerate(toks):
+        tok = jnp.full((1, 1), int(t), jnp.int32)
+        pos = jnp.full((1,), i, jnp.int32)
+        ld, dense = mod.decode_step(params, tok, dense, pos, arch)
+        lq, quant = mod.decode_step(params, tok, quant, pos, arch,
+                                    block_tables=bt)
+        delta = max(delta, float(jnp.max(jnp.abs(ld - lq))))
+    return delta
+
+
 def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   max_batch: int, n_requests: int, rate: float,
                   prompt_buckets, gen_range, out: str, seed: int = 0,
@@ -178,6 +217,7 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
                   shared_frac: float = 0.0,
                   train_stages: int = 0,
                   train_microbatches: int = 8,
+                  kv_quant: str | None = None,
                   profile_path: str = "") -> dict:
     import jax
     import jax.numpy as jnp
@@ -205,6 +245,20 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         prefill_chunk_tokens=chunk,
         shared_prefix_tokens=shared_prefix_len, save_plan=save_plan,
         profile_path=profile_path)
+    kv_quant = None if kv_quant in (None, "none") else kv_quant
+    plan_q = None
+    if kv_quant and kv_block_size:
+        # the int8 mode executes under a plan priced at the quantized
+        # pool's cache-read width (and carrying kv_quant provenance in
+        # its meta); the fp modes keep the fp-priced plan above
+        plan_q = resolve_serve_plan(
+            arch, mesh_spec if n_dev > 1 else None, plan_path=plan_path,
+            strategy=strategy, prompt_len=max(prompt_buckets),
+            max_batch=max_batch, max_len=max_len,
+            kv_block_size=kv_block_size, typical_tokens=typical,
+            prefill_chunk_tokens=chunk,
+            shared_prefix_tokens=shared_prefix_len, kv_quant=kv_quant,
+            profile_path=profile_path)
     mod = model_module(arch)
     params = mod.init_lm(jax.random.PRNGKey(0), arch, jnp.float32)
     trace = make_trace(n_requests, rate, prompt_buckets, gen_range,
@@ -229,6 +283,7 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
         "kv_pool_blocks": int(kv_pool_blocks),
         "shared_prefix_len": int(shared_prefix_len),
         "shared_frac": float(shared_frac),
+        "kv_quant": kv_quant or "none",
         # the plan the trace executed under, so the perf trajectory can
         # attribute throughput moves to strategy moves (plan-vs-uniform
         # speedup accumulates across CI runs)
@@ -275,17 +330,24 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
     # and unchunked (same engine, prefill_chunk_tokens=0 — stall-the-
     # world prefill) is the chunking A/B oracle for the ITL win
     runs = [("continuous", "continuous", kv_block_size, kv_pool_blocks,
-             chunk),
-            ("unchunked", "continuous", kv_block_size, kv_pool_blocks, 0),
-            ("static", "static", kv_block_size, kv_pool_blocks, 0)]
+             chunk, None),
+            ("unchunked", "continuous", kv_block_size, kv_pool_blocks, 0,
+             None),
+            ("static", "static", kv_block_size, kv_pool_blocks, 0, None)]
     if kv_block_size:
-        runs.append(("dense", "continuous", 0, 0, chunk))
+        runs.append(("dense", "continuous", 0, 0, chunk, None))
+    if kv_quant and kv_block_size:
+        # same trace, same chunked continuous engine, int8 paged pool —
+        # the quantization A/B against the fp "continuous" mode above
+        runs.append(("continuous_int8", "continuous", kv_block_size,
+                     kv_pool_blocks, chunk, kv_quant))
     with use_mesh(mesh if n_dev > 1 else None):
-        for mode, policy, bs, pool, ck in runs:
+        for mode, policy, bs, pool, ck, kvq in runs:
             engine = ServeEngine(params, arch, ServeConfig(
                 max_batch=max_batch, max_len=max_len, policy=policy,
                 kv_block_size=bs, kv_pool_blocks=pool or None,
-                prefill_chunk_tokens=ck, q_chunk=256), plan=plan)
+                prefill_chunk_tokens=ck, q_chunk=256, kv_quant=kvq),
+                plan=plan_q if kvq else plan)
             engine.warmup(buckets)
             report["modes"][mode] = run_mode(engine, trace)
             m = report["modes"][mode]
@@ -328,6 +390,22 @@ def run_benchmark(*, arch_name: str, width: int, depth: int, vocab: int,
             / max(modes["dense"]["kv_bytes_reserved"], 1), 3)
         print(f"paged/dense throughput: {report['paged_speedup']}x  "
               f"kv reserved: {report['kv_reserved_frac']:.1%} of dense")
+    if "continuous_int8" in modes:
+        # headline quantization wins the CI gate watches: the int8/fp
+        # reservation ratio (deterministic bytes — int8 payload + f32
+        # scales over the bf16/f32 pool) and the teacher-forced logit
+        # delta (pure numerics, no scheduling in the loop)
+        report["quant_kv_reserved_frac"] = round(
+            modes["continuous_int8"]["kv_bytes_reserved"]
+            / max(modes["continuous"]["kv_bytes_reserved"], 1), 4)
+        report["quant_speedup"] = round(
+            modes["continuous_int8"]["out_tok_per_s"]
+            / max(modes["continuous"]["out_tok_per_s"], 1e-9), 3)
+        report["quant_logit_agreement"] = round(
+            quant_logit_probe(mod, params, arch, arch.vocab), 6)
+        print(f"int8 kv reserved: {report['quant_kv_reserved_frac']:.1%} "
+              f"of fp  int8/fp throughput: {report['quant_speedup']}x  "
+              f"max logit delta: {report['quant_logit_agreement']:.4g}")
     if train_stages not in (0, 1):
         # stage-dimension trajectory point: search the *train* phase with
         # the two-level pipeline search on a fixed synthetic 8-device mesh
@@ -396,6 +474,13 @@ def main() -> None:
     ap.add_argument("--shared-frac", type=float, default=0.0,
                     help="fraction of requests that carry the shared "
                          "prefix")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8"],
+                    help="additionally run a continuous_int8 mode (same "
+                         "trace, int8 paged pool with per-row scales) and "
+                         "report quant_kv_reserved_frac (int8/fp bytes), "
+                         "quant_speedup and quant_logit_agreement (teacher-"
+                         "forced max logit delta) for the CI gate")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--strategy", default="uniform",
                     choices=["uniform", "data", "model", "owt", "searched"],
@@ -436,6 +521,7 @@ def main() -> None:
               shared_frac=args.shared_frac,
               train_stages=args.train_stages,
               train_microbatches=args.train_microbatches,
+              kv_quant=args.kv_quant,
               profile_path=args.device_profile)
     if args.smoke:
         # CI-sized model, but the trace shape of the paged-KV acceptance

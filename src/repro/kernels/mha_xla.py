@@ -189,11 +189,14 @@ def mixed_decode_attention_xla(q, k, v, kv_len, *, block_k=None):
     return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
 
 
-def paged_mixed_attention_xla(q, k_pool, v_pool, block_tables, kv_len):
+def paged_mixed_attention_xla(q, k_pool, v_pool, block_tables, kv_len, *,
+                              k_scale=None, v_scale=None):
     """q: (B, KH, G, T, D); k/v_pool: (NB, block_size, KH, D);
     block_tables: (B, pages); kv_len: (B, T).  Streams each slot's
     *logical* pages in order — no dense gather of the whole table — up to
-    the deepest live slot."""
+    the deepest live slot.  With ``k_scale``/``v_scale`` ((NB, block_size,
+    KH) f32) the pools are int8 and each streamed block dequantizes as it
+    is sliced in."""
     B, KH, G, T, D = q.shape
     bs = k_pool.shape[1]
     pages = block_tables.shape[1]
@@ -211,6 +214,9 @@ def paged_mixed_attention_xla(q, k_pool, v_pool, block_tables, kv_len):
         ids = jax.lax.dynamic_slice_in_dim(bt, i, 1, 1)[:, 0]    # (B,)
         kb = k_pool[ids].astype(jnp.float32)                # (B, bs, KH, D)
         vb = v_pool[ids].astype(jnp.float32)
+        if k_scale is not None:
+            kb = kb * k_scale[ids][..., None]               # (B, bs, KH, 1)
+            vb = vb * v_scale[ids][..., None]
         s = jnp.einsum("bkgtd,blkd->bkgtl", qf, kb)
         pos = i * bs + jnp.arange(bs)
         valid = pos[None, None, :] < kv_len[:, :, None]          # (B, T, bs)
@@ -249,16 +255,24 @@ def _decode_supports(q, k, v, kv_len, *, block_k=None):
     return q.shape[1] == k.shape[1] and k.shape == v.shape
 
 
-def _paged_xla(q, k_pool, v_pool, block_tables, kv_len):
+def _paged_xla(q, k_pool, v_pool, block_tables, kv_len, *,
+               k_scale=None, v_scale=None):
     from .ref import paged_decode_attention_ref
     if q.ndim == 5:
         return paged_mixed_attention_xla(q, k_pool, v_pool, block_tables,
-                                         kv_len)
+                                         kv_len, k_scale=k_scale,
+                                         v_scale=v_scale)
     return paged_decode_attention_ref(q, k_pool, v_pool, block_tables,
-                                      kv_len)
+                                      kv_len, k_scale=k_scale,
+                                      v_scale=v_scale)
 
 
-def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
+def _paged_supports(q, k_pool, v_pool, block_tables, kv_len, *,
+                    k_scale=None, v_scale=None):
+    if (k_scale is None) != (v_scale is None):
+        return False
+    if k_scale is not None and k_scale.shape != k_pool.shape[:-1]:
+        return False
     return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
             and block_tables.ndim == 2
             and block_tables.shape[0] == q.shape[0])

@@ -71,22 +71,40 @@ def decode_attention(q, k, v, kv_len, *, block_k: int | None = None,
 
 
 @partial(jax.jit, static_argnames=("backend",))
-def _paged_decode(q, k_pool, v_pool, block_tables, kv_len, *, backend):
+def _paged_decode(q, k_pool, v_pool, block_tables, kv_len, k_scale,
+                  v_scale, *, backend):
     return dispatch.call("paged_decode_attention", q, k_pool, v_pool,
-                         block_tables, kv_len, backend=backend)
+                         block_tables, kv_len, k_scale=k_scale,
+                         v_scale=v_scale, backend=backend)
 
 
 def paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len, *,
+                           k_scale=None, v_scale=None,
                            interpret: bool | None = None,
                            backend: str | None = None):
     """q: (B, KH, G, D); k_pool/v_pool: (NB, block_size, KH, D);
     block_tables: (B, pages) int32 -> (B, KH, G, D).
-    kv_len: scalar or (B,) per-slot valid lengths."""
+    kv_len: scalar or (B,) per-slot valid lengths.  With
+    ``k_scale``/``v_scale`` ((NB, block_size, KH) f32) the pools are int8
+    and every backend dequantizes after its block gather."""
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError(
+            "paged_decode_attention: k_scale and v_scale must be passed "
+            "together (one without the other would run fp attention on "
+            "int8 payload)")
+    if k_scale is not None:
+        want = tuple(k_pool.shape[:3])
+        got = (tuple(k_scale.shape), tuple(v_scale.shape))
+        if got != (want, want):
+            raise ValueError(
+                f"paged_decode_attention: scale shapes {got} do not match "
+                f"the pool's (NB, block_size, KH) = {want}")
     impl = dispatch.select("paged_decode_attention", q, k_pool, v_pool,
-                           block_tables, kv_len,
+                           block_tables, kv_len, k_scale=k_scale,
+                           v_scale=v_scale,
                            backend=_resolve(backend, interpret))
-    return _paged_decode(q, k_pool, v_pool, block_tables, kv_len,
-                         backend=impl.backend)
+    return _paged_decode(q, k_pool, v_pool, block_tables, kv_len, k_scale,
+                         v_scale, backend=impl.backend)
 
 
 @partial(jax.jit, static_argnames=("chunk", "return_state", "backend"))

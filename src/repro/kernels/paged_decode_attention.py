@@ -73,12 +73,67 @@ def _paged_kernel(bt_ref, len_ref, q_ref, k_ref, v_ref, o_ref, m_ref,
                        / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
 
 
+def _paged_kernel_quant(bt_ref, len_ref, q_ref, k_ref, v_ref, ks_ref,
+                        vs_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                        block_size: int, pages: int, scale: float,
+                        kv_heads: int):
+    """Int8 variant: k/v blocks arrive as int8 plus per-token-slot f32
+    scale rows (``ks_ref``/``vs_ref``, block shape (1, 1, block_size) from
+    the (NB, KH, bs) transposed scale arrays) DMA'd through the same
+    scalar-prefetched block table; dequantization happens in VMEM right
+    before the dot."""
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = len_ref[pl.program_id(0) // kv_heads]
+    start = pi * block_size
+
+    @pl.when(start < kv_len)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)             # (G, D)
+        ks = ks_ref[0, 0, :]                            # (bs,) f32
+        vs = vs_ref[0, 0, :]
+        k = k_ref[0, :, 0, :].astype(jnp.float32) * ks[:, None]   # (bs, D)
+        v = v_ref[0, :, 0, :].astype(jnp.float32) * vs[:, None]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (G, bs)
+        kpos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(kpos < kv_len, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, -1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(pi == pages - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...]
+                       / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
 def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
                            v_pool: jax.Array, block_tables: jax.Array,
-                           kv_len, *, interpret: bool = False) -> jax.Array:
+                           kv_len, *, k_scale: jax.Array | None = None,
+                           v_scale: jax.Array | None = None,
+                           interpret: bool = False) -> jax.Array:
     """q: (B, KH, G, D); k_pool/v_pool: (NB, bs, KH, D); block_tables:
     (B, pages) int32; kv_len: scalar int32 or a (B,) vector of per-slot
-    valid lengths.  Returns (B, KH, G, D)."""
+    valid lengths.  Returns (B, KH, G, D).
+
+    With ``k_scale``/``v_scale`` ((NB, bs, KH) f32) the pools are int8;
+    each grid step DMAs the physical block's scale row alongside the
+    payload (same scalar-prefetched table dereference) and dequantizes in
+    VMEM.  Scales are transposed to (NB, KH, bs) outside the kernel so
+    their lane axis is the 128-aligned block size."""
     from .ref import normalize_kv_len
 
     B, KH, G, D = q.shape
@@ -87,24 +142,37 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
     scale = 1.0 / math.sqrt(D)
     kv_len = normalize_kv_len(kv_len, B)
     block_tables = block_tables.astype(jnp.int32)
+    quant = k_scale is not None
 
-    kernel = functools.partial(_paged_kernel, block_size=bs, pages=pages,
-                               scale=scale, kv_heads=KH)
+    pool_spec = pl.BlockSpec((1, bs, 1, D),
+                             lambda bk, pi, bt, ln:
+                             (bt[bk // KH, pi], 0, bk % KH, 0))
+    scale_spec = pl.BlockSpec((1, 1, bs),
+                              lambda bk, pi, bt, ln:
+                              (bt[bk // KH, pi], bk % KH, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, G, D),
+                     lambda bk, pi, bt, ln: (bk // KH, bk % KH, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q, k_pool, v_pool]
+    if quant:
+        in_specs += [scale_spec, scale_spec]
+        # (NB, bs, KH) -> (NB, KH, bs): lane axis = block size
+        operands += [k_scale.astype(jnp.float32).transpose(0, 2, 1),
+                     v_scale.astype(jnp.float32).transpose(0, 2, 1)]
+        kernel = functools.partial(_paged_kernel_quant, block_size=bs,
+                                   pages=pages, scale=scale, kv_heads=KH)
+    else:
+        kernel = functools.partial(_paged_kernel, block_size=bs,
+                                   pages=pages, scale=scale, kv_heads=KH)
     # Scalar prefetch: the block table (and lengths) are available to the
     # index maps, so the pool blockspec fetches table[b, page] directly.
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B * KH, pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, D),
-                         lambda bk, pi, bt, ln: (bk // KH, bk % KH, 0, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda bk, pi, bt, ln:
-                         (bt[bk // KH, pi], 0, bk % KH, 0)),
-            pl.BlockSpec((1, bs, 1, D),
-                         lambda bk, pi, bt, ln:
-                         (bt[bk // KH, pi], 0, bk % KH, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, G, D),
                                lambda bk, pi, bt, ln:
                                (bk // KH, bk % KH, 0, 0)),
@@ -119,15 +187,20 @@ def paged_decode_attention(q: jax.Array, k_pool: jax.Array,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KH, G, D), q.dtype),
         interpret=interpret,
-    )(block_tables, kv_len, q, k_pool, v_pool)
+    )(block_tables, kv_len, *operands)
 
 
 # --------------------------------------------------------------------------- #
 # dispatch registration: "pallas" (native TPU) and "interpret" backends
 # --------------------------------------------------------------------------- #
-def _supports(q, k_pool, v_pool, block_tables, kv_len):
+def _supports(q, k_pool, v_pool, block_tables, kv_len, *,
+              k_scale=None, v_scale=None):
     # mixed-step 5-d q (per-slot variable query tokens) falls back to the
     # ref/xla gather backends — this kernel is single-token-per-slot only
+    if (k_scale is None) != (v_scale is None):
+        return False
+    if k_scale is not None and k_scale.shape != k_pool.shape[:-1]:
+        return False
     return (q.ndim == 4
             and k_pool.shape == v_pool.shape
             and q.shape[1] == k_pool.shape[2]
@@ -135,16 +208,20 @@ def _supports(q, k_pool, v_pool, block_tables, kv_len):
             and block_tables.shape[0] == q.shape[0])
 
 
-def _supports_native(q, k_pool, v_pool, block_tables, kv_len):
+def _supports_native(q, k_pool, v_pool, block_tables, kv_len, *,
+                     k_scale=None, v_scale=None):
     # Mosaic wants the (G, block_size) score tile lane axis 128-aligned;
     # pools with a smaller block size fall back to the gather backend.
-    return _supports(q, k_pool, v_pool, block_tables, kv_len) \
+    # (The transposed scale rows share the same lane axis.)
+    return _supports(q, k_pool, v_pool, block_tables, kv_len,
+                     k_scale=k_scale, v_scale=v_scale) \
         and k_pool.shape[1] % 128 == 0
 
 
 def _via_pallas(q, k_pool, v_pool, block_tables, kv_len, *,
-                interpret=False):
+                k_scale=None, v_scale=None, interpret=False):
     return paged_decode_attention(q, k_pool, v_pool, block_tables, kv_len,
+                                  k_scale=k_scale, v_scale=v_scale,
                                   interpret=interpret)
 
 

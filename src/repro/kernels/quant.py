@@ -1,0 +1,41 @@
+"""Int8 KV quantization helpers (pure jnp — no Pallas internals).
+
+The paged block pool stores K/V as int8 with an f32 scale per token
+slot per KV head, riding inside the same ``{"k", "v"}`` cache subtree as
+``k_scale`` / ``v_scale`` leaves (shape = payload shape minus the head
+dim).  Per-row scaling over ``hd`` keeps writes incremental: a new token
+never rescales previously written slots, so the scatter-on-write paths
+(mixed-step lazy boundary crossing, single-token decode, whole-prompt
+``write_slot``) quantize exactly the rows they touch.
+
+Symmetric absmax: ``scale = max(|x|) / 127`` per row, payload
+``round(x / scale)`` clipped to [-127, 127].  All-zero rows keep
+``scale = 0`` and quantize through a safe divisor of 1 — dequantizing
+a never-written (or zero) row yields exactly 0.0, matching the fp
+pool's zero init.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+#: int8 symmetric range bound.
+QMAX = 127.0
+
+
+def quantize_kv(x):
+    """Quantize ``x`` over its last axis -> ``(q int8, scale f32)``.
+
+    ``x``: (..., hd) float.  ``q``: same shape, int8.  ``scale``:
+    (...,) f32, ``dequantize_kv(q, scale) ~= x``.
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / QMAX
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / safe[..., None]),
+                 -QMAX, QMAX).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_kv(q, scale):
+    """Inverse of :func:`quantize_kv`: (..., hd) int8 + (...,) f32 -> f32."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)

@@ -100,7 +100,8 @@ def mixed_decode_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
 def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
                                v_pool: jax.Array, block_tables: jax.Array,
-                               kv_len) -> jax.Array:
+                               kv_len, *, k_scale: jax.Array | None = None,
+                               v_scale: jax.Array | None = None) -> jax.Array:
     """Gather oracle for the paged flash-decode kernel.
 
     q: (B, KH, G, D); k_pool/v_pool: (NB, block_size, KH, D);
@@ -112,6 +113,10 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     reuses :func:`decode_attention_ref`; unallocated table entries point
     at the engine's trash block and are masked by ``kv_len`` exactly like
     stale positions in the dense cache.
+
+    With ``k_scale``/``v_scale`` ((NB, block_size, KH) f32) the pools are
+    int8 and each gathered row is dequantized right after the block-table
+    gather (``q * scale`` per token slot per head).
 
     A 5-d q ``(B, KH, G, T, D)`` with kv_len ``(B, T)`` is the mixed-step
     form (per-slot variable query tokens) and routes through
@@ -125,16 +130,23 @@ def paged_decode_attention_ref(q: jax.Array, k_pool: jax.Array,
     bs = k_pool.shape[1]
     pages = block_tables.shape[1]
     bt = block_tables.astype(jnp.int32)
-    # (B, pages, bs, KH, D) -> (B, KH, pages*bs, D)
-    gather = lambda pool: pool[bt].transpose(0, 3, 1, 2, 4).reshape(
-        B, KH, pages * bs, D)
+
+    # (B, pages, bs, KH, D) -> (B, KH, pages*bs, D), dequantizing the
+    # gathered blocks when the pool carries scales
+    def gather(pool, scale):
+        g = pool[bt]
+        if scale is not None:
+            g = g.astype(jnp.float32) * scale[bt][..., None]
+        return g.transpose(0, 3, 1, 2, 4).reshape(B, KH, pages * bs, D)
+
+    gather_k = lambda: gather(k_pool, k_scale)
+    gather_v = lambda: gather(v_pool, v_scale)
     if mixed:
         out = mixed_decode_attention_ref(q.reshape(B, KH * G, T, D),
-                                         gather(k_pool), gather(v_pool),
-                                         kv_len)
+                                         gather_k(), gather_v(), kv_len)
         return out.reshape(B, KH, G, T, D)
-    out = decode_attention_ref(q.reshape(B, KH * G, D), gather(k_pool),
-                               gather(v_pool), kv_len)
+    out = decode_attention_ref(q.reshape(B, KH * G, D), gather_k(),
+                               gather_v(), kv_len)
     return out.reshape(B, KH, G, D)
 
 
@@ -246,7 +258,12 @@ def _wkv6_ref(r, k, v, w, u, *, chunk=64, initial_state=None,
 # decode_attention / paged_decode_attention get their "xla" backend from
 # mha_xla.py: the 4-d single-token form aliases these references, the
 # 5-d mixed form streams KV blocks with a dynamic depth bound there.
-def _paged_supports(q, k_pool, v_pool, block_tables, kv_len):
+def _paged_supports(q, k_pool, v_pool, block_tables, kv_len, *,
+                    k_scale=None, v_scale=None):
+    if (k_scale is None) != (v_scale is None):
+        return False
+    if k_scale is not None and k_scale.shape != k_pool.shape[:-1]:
+        return False
     return (k_pool.shape == v_pool.shape and q.shape[1] == k_pool.shape[2]
             and block_tables.ndim == 2
             and block_tables.shape[0] == q.shape[0])

@@ -6,7 +6,9 @@ requests admitted into free slots mid-decode, ragged single-token decode
 with per-slot positions, slots retired on EOS / max-tokens.  KV is paged
 (``--kv-block-size`` tokens per block, block-table indirection, lazy
 allocation; ``--kv-pool-blocks`` bounds the pool) — ``--kv-block-size
-0`` keeps the dense per-slot ``max_len`` rows.  Prompts prefill in
+0`` keeps the dense per-slot ``max_len`` rows, and ``--kv-quant int8``
+stores the paged blocks as int8 with per-row scales (quantize on write,
+dequantize on read, ~4x less pool memory).  Prompts prefill in
 chunks *inside* the decode batch (mixed steps; ``--prefill-chunk-tokens``
 sets the per-step budget, 0 restores stall-the-world prefill) so
 in-flight decodes never stall behind an admission.  Identical whole
@@ -78,6 +80,7 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
                        typical_tokens: int | None = None,
                        prefill_chunk_tokens: int = 0,
                        shared_prefix_tokens: int = 0,
+                       kv_quant: str | None = None,
                        save_plan: str = "",
                        profile_path: str = "") -> ParallelPlan:
     """Serving preset of :func:`repro.plans.resolve_plan`: the phases a
@@ -107,6 +110,11 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
     KV bytes the pool actually holds, which is the whole point of
     sharing (PaSE's argument that the search is only as good as the
     cost model's memory truth).
+
+    With ``kv_quant="int8"`` the decode cache read is priced at the
+    quantized pool's stored width (1 byte/elem + the amortized f32
+    per-row scale) instead of the fp width, and the plan's meta records
+    the quantization it was searched for.
     """
     kv_tokens = None
     if kv_block_size:
@@ -123,6 +131,7 @@ def resolve_serve_plan(arch, mesh_spec, *, plan_path: str = "",
         plan_path=plan_path, strategy=strategy, save_plan=save_plan,
         prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
         decode_kv_tokens=kv_tokens, decode_q_tokens=q_tokens,
+        decode_kv_quant=kv_quant if kv_block_size else None,
         profile_path=profile_path)
     # A staged *train* phase riding a loaded plan file is fine (serving
     # ignores it); a pipeline-staged decode is not executable here —
@@ -240,6 +249,13 @@ def main() -> None:
                          "blocks warm after their requests retire "
                          "(evicted leaf-first when the pool runs dry), "
                          "none shares only between concurrent requests")
+    ap.add_argument("--kv-quant", default="none",
+                    choices=["none", "int8"],
+                    help="paged-pool KV quantization: int8 stores KV "
+                         "blocks as int8 with per-row f32 scales riding "
+                         "the block table (quantize on write, dequantize "
+                         "after the block gather); requires "
+                         "--kv-block-size > 0")
     ap.add_argument("--shared-prefix-tokens", type=int, default=0,
                     help="typical shared-prefix length for decode-phase "
                          "plan pricing: these tokens are allocated once "
@@ -299,6 +315,7 @@ def main() -> None:
         max_batch=args.batch, max_len=max_len,
         kv_block_size=args.kv_block_size, prefill_chunk_tokens=chunk,
         shared_prefix_tokens=args.shared_prefix_tokens,
+        kv_quant=None if args.kv_quant == "none" else args.kv_quant,
         save_plan=args.save_plan, profile_path=args.device_profile)
     if arch.enc_layers:
         with use_mesh(mesh if n_dev > 1 else None):
@@ -328,7 +345,8 @@ def main() -> None:
                 prefill_chunk_tokens=chunk, q_chunk=256,
                 kernel_backend=args.kernel_backend or None,
                 prefix_cache=not args.no_prefix_cache,
-                prefix_evict=args.prefix_evict),
+                prefix_evict=args.prefix_evict,
+                kv_quant=None if args.kv_quant == "none" else args.kv_quant),
             plan=plan)
         # warm up on the *actual* request prompt lengths — for frontend
         # (VLM) archs the dataset emits prompts shorter than
@@ -343,7 +361,9 @@ def main() -> None:
     s = engine.stats
     out_tokens = sum(len(c.tokens) for c in completions)
     kv_desc = (f"paged(bs={engine.block_size}, "
-               f"peak_blocks={engine.peak_blocks_in_use})"
+               f"peak_blocks={engine.peak_blocks_in_use}"
+               + (f", quant={engine.kv_quant}" if engine.kv_quant else "")
+               + ")"
                if engine.paged else "dense")
     print(f"arch={arch.name} slots={args.batch} requests={n_requests} "
           f"prompt={args.prompt_len} gen<={args.gen} mode={mode} "

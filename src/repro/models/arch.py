@@ -33,6 +33,10 @@ class ShapeSpec:
     # prefill riding the decode batch), where the average slot carries
     # its share of the per-step prefill budget.
     q_tokens: int = 1
+    # decode only: paged-pool KV quantization ("int8" prices the cache
+    # read at 1 byte/elem plus the amortized f32 per-row scale; None =
+    # the fp pool at activation width).
+    kv_quant: str | None = None
 
     @property
     def tokens(self) -> int:

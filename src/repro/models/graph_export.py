@@ -72,7 +72,8 @@ def export_graph(arch: ArchConfig, shape: ShapeSpec) -> CompGraph:
 
 def phase_shape(phase: str, *, seq_len: int, batch: int,
                 kv_tokens: int | None = None,
-                q_tokens: int | None = None) -> ShapeSpec:
+                q_tokens: int | None = None,
+                kv_quant: str | None = None) -> ShapeSpec:
     """The ShapeSpec a serving/training *phase* prices its graph with.
 
     ``train``:   the dense global batch (fwd+bwd, gradient sync);
@@ -92,6 +93,12 @@ def phase_shape(phase: str, *, seq_len: int, batch: int,
     ``q_tokens`` query tokens per step instead of 1 — the matmul/FFN
     terms scale with it while the cache-read term does not, which is
     exactly the trade the searched decode plan must see.
+
+    ``kv_quant`` (decode only) prices the cache read at the paged pool's
+    stored width: ``"int8"`` means 1 byte/elem plus the amortized f32
+    per-(token-slot, head) scale, so the dominant ``kv_bytes`` term
+    shrinks ~4x against the bf16 pool and the searched decode plan can
+    trade cache-sequence sharding away accordingly.
     """
     if phase == "train":
         return ShapeSpec(f"train_{seq_len}", seq_len, batch, "train")
@@ -100,8 +107,11 @@ def phase_shape(phase: str, *, seq_len: int, batch: int,
     if phase == "decode":
         depth = min(seq_len, kv_tokens) if kv_tokens else seq_len
         qt = max(1, int(q_tokens or 1))
-        name = f"decode_{depth}" + (f"+q{qt}" if qt > 1 else "")
-        return ShapeSpec(name, depth, batch, "decode", q_tokens=qt)
+        kvq = None if kv_quant in (None, "none") else kv_quant
+        name = (f"decode_{depth}" + (f"+q{qt}" if qt > 1 else "")
+                + (f"+{kvq}" if kvq else ""))
+        return ShapeSpec(name, depth, batch, "decode", q_tokens=qt,
+                         kv_quant=kvq)
     raise ValueError(
         f"unknown phase {phase!r}; expected train | prefill | decode")
 
@@ -132,7 +142,14 @@ def _decoder_chain(b: _Builder, arch: ArchConfig, B: int, Sq: int, Skv: int,
 
     def attn_pair(i, tag="attn", kv_tokens=None, cross=False):
         kvt = Skv if kv_tokens is None else kv_tokens
-        kv_bytes = 2 * B * kvt * KH * hd * A_BYTES
+        # decode reads the paged pool at its *stored* width: int8 payload
+        # plus the amortized f32 per-(token-slot, head) scale (4 bytes
+        # over hd payload bytes).  Everything else stays at A_BYTES.
+        if decode and not cross and b.shape.kv_quant == "int8":
+            kv_width = 1.0 + 4.0 / hd
+        else:
+            kv_width = float(A_BYTES)
+        kv_bytes = 2 * B * kvt * KH * hd * kv_width
         core = 4 * B * H * Sq * kvt * hd
         proj = 2 * T * D * (H + 2 * KH) * hd
         aout = TensorSpec.make(batch=B, seq=Sq, heads=H, hd=hd)

@@ -25,6 +25,7 @@ from repro.core.config import LayerConfig
 from repro.core.sharding import constrain
 from repro.kernels import dispatch as kernel_dispatch
 from repro.kernels.mha_xla import mha_chunked as _mha_core  # noqa: F401
+from repro.kernels.quant import quantize_kv
 
 # --------------------------------------------------------------------------- #
 # init helpers
@@ -174,6 +175,7 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         idx = cache_pos[:, None] + t_ar[None, :]              # (B, S)
         kv_len = cache_pos[:, None] + jnp.minimum(t_ar + 1, q_lens[:, None])
         kd, vd = k.astype(ck.dtype), v.astype(cv.dtype)
+        cks = cvs = None
         if block_tables is not None:
             NB, bs = ck.shape[0], ck.shape[1]
             pages = block_tables.shape[1]
@@ -183,6 +185,19 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
             idxc = jnp.minimum(idx, pages * bs - 1)
             blk = jnp.take_along_axis(block_tables, idxc // bs, axis=1)
             phys = jnp.where(valid, blk * bs + idxc % bs, 0)  # (B, S)
+            cks = kv_cache.get("k_scale")
+            cvs = kv_cache.get("v_scale")
+            if cks is not None:
+                # int8 pool: quantize the live rows and scatter their
+                # scale rows into the flattened pool at the same slots
+                kd, ks = quantize_kv(k)
+                vd, vs = quantize_kv(v)
+                cks = cks.reshape(NB * bs, KH).at[phys].set(ks).reshape(
+                    cks.shape)
+                cvs = cvs.reshape(NB * bs, KH).at[phys].set(vs).reshape(
+                    cvs.shape)
+                cks = constrain(cks, cfg, (None, None, "heads"))
+                cvs = constrain(cvs, cfg, (None, None, "heads"))
             ck = ck.reshape(NB * bs, KH, hd).at[phys].set(kd).reshape(
                 ck.shape)
             cv = cv.reshape(NB * bs, KH, hd).at[phys].set(vd).reshape(
@@ -202,14 +217,18 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         qg = q.transpose(0, 2, 1, 3).reshape(B, KH, H // KH, S, hd)
         if block_tables is not None:
             o = kernel_dispatch.call("paged_decode_attention", qg, ck, cv,
-                                     block_tables, kv_len)
+                                     block_tables, kv_len,
+                                     k_scale=cks, v_scale=cvs)
         else:
             o = kernel_dispatch.call("decode_attention", qg,
                                      ck.transpose(0, 2, 1, 3),
                                      cv.transpose(0, 2, 1, 3), kv_len)
         o = o.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
         o = constrain(o, cfg, ("batch", "seq", "heads", None))
-        return o, {"k": ck, "v": cv}
+        nc = {"k": ck, "v": cv}
+        if block_tables is not None and cks is not None:
+            nc["k_scale"], nc["v_scale"] = cks, cvs
+        return o, nc
 
     if kv_cache is not None and block_tables is not None:
         # Paged decode: scatter the new token's K/V into its physical
@@ -228,20 +247,36 @@ def attention(p: dict, x: jax.Array, arch, cfg: LayerConfig,
         NB, bs = ck.shape[0], ck.shape[1]
         phys = (block_tables[jnp.arange(B), cache_pos // bs] * bs
                 + cache_pos % bs)                             # (B,)
-        ck = ck.reshape(NB * bs, KH, hd).at[phys].set(
-            k[:, 0].astype(ck.dtype)).reshape(ck.shape)
-        cv = cv.reshape(NB * bs, KH, hd).at[phys].set(
-            v[:, 0].astype(cv.dtype)).reshape(cv.shape)
+        cks = kv_cache.get("k_scale")
+        cvs = kv_cache.get("v_scale")
+        if cks is not None:
+            kq, ks = quantize_kv(k[:, 0])                    # (B, KH, hd)
+            vq, vs = quantize_kv(v[:, 0])
+            kd, vd = kq, vq
+            cks = cks.reshape(NB * bs, KH).at[phys].set(ks).reshape(
+                cks.shape)
+            cvs = cvs.reshape(NB * bs, KH).at[phys].set(vs).reshape(
+                cvs.shape)
+            cks = constrain(cks, cfg, (None, None, "heads"))
+            cvs = constrain(cvs, cfg, (None, None, "heads"))
+        else:
+            kd, vd = k[:, 0].astype(ck.dtype), v[:, 0].astype(cv.dtype)
+        ck = ck.reshape(NB * bs, KH, hd).at[phys].set(kd).reshape(ck.shape)
+        cv = cv.reshape(NB * bs, KH, hd).at[phys].set(vd).reshape(cv.shape)
         q = constrain(q, cfg, ("batch", "seq", "heads", None))
         ck = constrain(ck, cfg, (None, None, "heads", None))
         cv = constrain(cv, cfg, (None, None, "heads", None))
         H = q.shape[2]
         qg = q.reshape(B, KH, H // KH, hd)
         o = kernel_dispatch.call("paged_decode_attention", qg, ck, cv,
-                                 block_tables, positions[..., -1] + 1)
+                                 block_tables, positions[..., -1] + 1,
+                                 k_scale=cks, v_scale=cvs)
         o = o.reshape(B, 1, H, hd)
         o = constrain(o, cfg, ("batch", "seq", "heads", None))
-        return o, {"k": ck, "v": cv}
+        nc = {"k": ck, "v": cv}
+        if cks is not None:
+            nc["k_scale"], nc["v_scale"] = cks, cvs
+        return o, nc
 
     new_cache = None
     if kv_cache is not None:

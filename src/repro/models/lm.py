@@ -389,22 +389,44 @@ def init_cache(arch: ArchConfig, batch: int, max_len: int,
 
 
 def init_paged_cache(arch: ArchConfig, num_blocks: int, block_size: int,
-                     batch: int, dtype=jnp.bfloat16) -> dict:
+                     batch: int, dtype=jnp.bfloat16,
+                     kv_quant: str | None = None) -> dict:
     """Paged variant of :func:`init_cache`: KV leaves are one global pool
     of ``num_blocks`` fixed-size blocks ``(n_units, NB, block_size, KH,
     hd)`` shared by all slots through a block table, instead of a dense
     ``max_len`` row per slot.  Recurrent (mamba / wkv6 / shift) state is
     O(1) in sequence length and stays slot-dense ``(n_units, batch,
-    ...)`` exactly as in the dense cache."""
+    ...)`` exactly as in the dense cache.
+
+    ``kv_quant="int8"`` stores the pool as int8 with per-token-slot
+    per-head f32 scales riding in the same ``kv`` subtree (``k_scale`` /
+    ``v_scale``, shape ``(n_units, NB, block_size, KH)``): the write
+    paths quantize row-wise on scatter, the paged attention backends
+    dequantize after the block-table gather.  Zero-initialized scales
+    dequantize never-written slots to exactly 0.0, same as the fp pool.
+    """
+    if kv_quant not in (None, "none", "int8"):
+        raise ValueError(f"unknown kv_quant {kv_quant!r}")
+    quant = kv_quant == "int8"
     dense = init_cache(arch, batch, 1, dtype)
     KH, hd, n = arch.n_kv_heads, arch.hd, arch.n_units
+    pool_dtype = jnp.int8 if quant else dtype
+
+    def kv_pool():
+        leaves = {
+            "k": jnp.zeros((n, num_blocks, block_size, KH, hd), pool_dtype),
+            "v": jnp.zeros((n, num_blocks, block_size, KH, hd), pool_dtype)}
+        if quant:
+            leaves["k_scale"] = jnp.zeros(
+                (n, num_blocks, block_size, KH), jnp.float32)
+            leaves["v_scale"] = jnp.zeros(
+                (n, num_blocks, block_size, KH), jnp.float32)
+        return leaves
+
     cache: dict = {}
     for lkey, c in dense.items():
-        cache[lkey] = {
-            k: ({"k": jnp.zeros((n, num_blocks, block_size, KH, hd), dtype),
-                 "v": jnp.zeros((n, num_blocks, block_size, KH, hd), dtype)}
-                if k == "kv" else v)
-            for k, v in c.items()}
+        cache[lkey] = {k: (kv_pool() if k == "kv" else v)
+                       for k, v in c.items()}
     return cache
 
 

@@ -35,6 +35,7 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
                       seq_len: int, batch: int,
                       kv_tokens: int | None = None,
                       q_tokens: int | None = None,
+                      kv_quant: str | None = None,
                       num_stages: int = 0, microbatches: int = 8,
                       options: SearchOptions | None = None,
                       profile=None,
@@ -43,7 +44,8 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
     ``None`` when the phase is unstaged, provenance dict).
     ``kv_tokens`` prices the decode phase's cache read at the paged
     engine's allocated-blocks depth; ``q_tokens`` prices the mixed step's
-    per-slot query width (see :func:`phase_shape`).  ``num_stages``
+    per-slot query width; ``kv_quant`` prices it at the pool's stored
+    byte width (see :func:`phase_shape`).  ``num_stages``
     routes the phase through the two-level pipeline search
     (:func:`~repro.core.stages.find_staged_strategy`): >1 forces that
     stage count, <0 auto-searches up to ``options.max_stages``; 0/1 keep
@@ -51,7 +53,8 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
     :class:`~repro.profiling.DeviceProfile`) calibrates the cost model
     the search prices against; the provenance records its fingerprint."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
-                        kv_tokens=kv_tokens, q_tokens=q_tokens)
+                        kv_tokens=kv_tokens, q_tokens=q_tokens,
+                        kv_quant=kv_quant)
     graph = export_graph(arch, shape)
     opts = options or SearchOptions()
     # auto mode: sweep up to options.max_stages when set, else every
@@ -69,7 +72,8 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
         prov = {
             "phase": phase,
             "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
-                      "kind": shape.kind, "q_tokens": shape.q_tokens},
+                      "kind": shape.kind, "q_tokens": shape.q_tokens,
+                      "kv_quant": shape.kv_quant},
             "cost_s": staged.cost,
             "search_seconds": staged.meta.get("stage_search_seconds"),
             "stage_count": stages.num_stages,
@@ -87,7 +91,8 @@ def search_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str, *,
     prov = {
         "phase": phase,
         "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
-                  "kind": shape.kind, "q_tokens": shape.q_tokens},
+                  "kind": shape.kind, "q_tokens": shape.q_tokens,
+                      "kv_quant": shape.kv_quant},
         "cost_s": strat.cost,
         "search_seconds": strat.meta.get("search_seconds"),
     }
@@ -100,15 +105,18 @@ def baseline_phase_plan(arch: ArchConfig, mesh: MeshSpec, phase: str,
                         strategy: str, *, seq_len: int, batch: int,
                         kv_tokens: int | None = None,
                         q_tokens: int | None = None,
+                        kv_quant: str | None = None,
                         ) -> tuple[ModelPlan, dict]:
     """Apply a named baseline (data/model/owt) to one phase's graph."""
     shape = phase_shape(phase, seq_len=seq_len, batch=batch,
-                        kv_tokens=kv_tokens, q_tokens=q_tokens)
+                        kv_tokens=kv_tokens, q_tokens=q_tokens,
+                        kv_quant=kv_quant)
     graph = export_graph(arch, shape)
     strat = BASELINES[strategy](graph, mesh)
     prov = {"phase": phase,
             "shape": {"seq_len": shape.seq_len, "batch": shape.global_batch,
-                      "kind": shape.kind, "q_tokens": shape.q_tokens}}
+                      "kind": shape.kind, "q_tokens": shape.q_tokens,
+                      "kv_quant": shape.kv_quant}}
     return strategy_to_plan(strat, arch), prov
 
 
@@ -120,6 +128,7 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                         max_batch: int = 8, max_len: int | None = None,
                         decode_kv_tokens: int | None = None,
                         decode_q_tokens: int | None = None,
+                        decode_kv_quant: str | None = None,
                         train_stages: int = 0,
                         train_microbatches: int = 8,
                         options: SearchOptions | None = None,
@@ -136,7 +145,10 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
     chunked-prefill engine: each slot amortizes its share of the
     per-step prefill chunk budget, so the matmul terms grow while the
     cache read stays put — the plan the search returns reflects that
-    trade.  ``mesh=None`` (single device) degrades to the uniform plan
+    trade.  ``decode_kv_quant`` ("int8") prices the decode cache read at
+    the quantized pool's stored width (and is recorded in the plan's
+    meta, so a loaded plan declares which pool it was searched for).
+    ``mesh=None`` (single device) degrades to the uniform plan
     regardless of ``strategy``.
 
     ``train_stages`` routes the train phase through the two-level
@@ -180,11 +192,12 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
         seq_len, batch = shapes[phase]
         kv = decode_kv_tokens if phase == "decode" else None
         qt = decode_q_tokens if phase == "decode" else None
+        kvq = decode_kv_quant if phase == "decode" else None
         if strategy == "searched":
             ns = train_stages if phase == "train" else 0
             plans[phase], st, phase_meta[phase] = search_phase_plan(
                 arch, mesh, phase, seq_len=seq_len, batch=batch,
-                kv_tokens=kv, q_tokens=qt, options=options,
+                kv_tokens=kv, q_tokens=qt, kv_quant=kvq, options=options,
                 num_stages=ns, microbatches=train_microbatches,
                 profile=profile)
             if st is not None and st.num_stages > 1:
@@ -192,11 +205,13 @@ def build_parallel_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
         else:
             plans[phase], phase_meta[phase] = baseline_phase_plan(
                 arch, mesh, phase, strategy, seq_len=seq_len, batch=batch,
-                kv_tokens=kv, q_tokens=qt)
+                kv_tokens=kv, q_tokens=qt, kv_quant=kvq)
     import jax
 
     meta = {"strategy": strategy, "phases": phase_meta,
             "jax": jax.__version__}
+    if decode_kv_quant and decode_kv_quant != "none":
+        meta["kv_quant"] = decode_kv_quant
     if profile is not None and strategy == "searched":
         meta["device_profile"] = profile.fingerprint()
     return ParallelPlan(
@@ -212,6 +227,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
                  max_len: int | None = None,
                  decode_kv_tokens: int | None = None,
                  decode_q_tokens: int | None = None,
+                 decode_kv_quant: str | None = None,
                  train_stages: int = 0,
                  train_microbatches: int = 8,
                  options: SearchOptions | None = None,
@@ -257,6 +273,14 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             if st.num_stages > 1:
                 log(f"plan: {phase} is pipeline-staged "
                     f"(S={st.num_stages}, M={st.microbatches})")
+        plan_kvq = plan.meta.get("kv_quant")
+        want_kvq = (decode_kv_quant
+                    if decode_kv_quant not in (None, "none") else None)
+        if plan_kvq != want_kvq:
+            log(f"plan: note — loaded plan was searched for "
+                f"kv_quant={plan_kvq!r} but this run serves "
+                f"kv_quant={want_kvq!r}; the decode cost model saw a "
+                f"different cache-read width")
         if profile is not None:
             searched_under = plan.meta.get("device_profile")
             if searched_under is None:
@@ -277,6 +301,7 @@ def resolve_plan(arch: ArchConfig, mesh: MeshSpec | None, *,
             prompt_len=prompt_len, max_batch=max_batch, max_len=max_len,
             decode_kv_tokens=decode_kv_tokens,
             decode_q_tokens=decode_q_tokens,
+            decode_kv_quant=decode_kv_quant,
             train_stages=train_stages,
             train_microbatches=train_microbatches, options=options,
             profile=profile)

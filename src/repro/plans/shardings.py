@@ -211,6 +211,9 @@ def cache_pspecs(cache, arch: ArchConfig, plan: ModelPlan, *,
         if "kv" in flat:
             cfg = sub.get("attn", R)
             if paged:
+                if leaf.ndim == 4:
+                    # int8 pool scales: (units, num_blocks, block_size, KH)
+                    return pspec(cfg, (None, None, None, "heads"))
                 # (units, num_blocks, block_size, KH, hd)
                 return pspec(cfg, (None, None, None, "heads", None))
             # (units, B, S, KH, hd)

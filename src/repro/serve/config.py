@@ -52,6 +52,12 @@ class ServeConfig:
       published blocks warm after their users retire (leaf-first LRU
       eviction when the pool runs dry), ``"none"`` shares only between
       concurrently live requests.
+    * ``kv_quant`` — paged-pool block quantization: ``"int8"`` stores KV
+      blocks as int8 with per-token-slot per-head f32 scales riding the
+      block table (quantize on write, dequantize after the block gather
+      in every attention backend); None / ``"none"`` keeps the fp pool.
+      Requires the paged cache (``kv_block_size > 0``); like
+      ``prefix_cache`` it is silently inert for attention-free archs.
     """
 
     max_batch: int
@@ -65,6 +71,9 @@ class ServeConfig:
     dtype: Any = field(default=jnp.float32, repr=False)
     prefix_cache: bool = True
     prefix_evict: str = "lru"
+    kv_quant: str | None = None
+
+    KV_QUANT = (None, "none", "int8")
 
     def __post_init__(self):
         if self.max_batch < 1:
@@ -81,6 +90,14 @@ class ServeConfig:
         if self.kv_block_size and self.kv_block_size < 0:
             raise ValueError(f"kv_block_size must be >= 0, "
                              f"got {self.kv_block_size}")
+        if self.kv_quant not in self.KV_QUANT:
+            raise ValueError(f"unknown kv_quant {self.kv_quant!r}; "
+                             f"expected one of {self.KV_QUANT}")
+        if (self.kv_quant not in (None, "none")
+                and not self.kv_block_size):
+            raise ValueError(
+                "kv_quant requires the paged KV cache (kv_block_size > 0); "
+                "the dense per-slot rows are always fp")
 
     def replace(self, **changes) -> "ServeConfig":
         from dataclasses import replace

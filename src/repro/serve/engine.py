@@ -60,6 +60,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sharding import current_mesh
+from repro.kernels.quant import quantize_kv
 from repro.models import model_module
 from repro.models.arch import ArchConfig
 from repro.models.plan import ModelPlan
@@ -91,6 +92,11 @@ def write_slot(pool: dict, row: dict, slot, block_ids=None) -> dict:
     overwritten *in full* (the rounding padding is the prefill row's
     zeros, so no previous occupant's KV survives in any prompt block);
     every other leaf takes the dense slot-row overwrite.
+
+    An int8 pool (``init_paged_cache(kv_quant="int8")``) carries
+    ``k_scale`` / ``v_scale`` leaves the fp prefill ``row`` does not:
+    the map walks the *pool* tree and quantizes the row's K/V on write,
+    scattering payload and scale rows into the same blocks as a unit.
     """
     if block_ids is None:
         return jax.tree.map(
@@ -99,14 +105,29 @@ def write_slot(pool: dict, row: dict, slot, block_ids=None) -> dict:
 
     nb = block_ids.shape[0]
 
-    def one(path, p, r):
-        if _is_kv_path(path):
-            n, _, bs = p.shape[:3]
-            rb = r[:, 0].reshape(n, nb, bs, *p.shape[3:])
-            return p.at[:, block_ids].set(rb.astype(p.dtype))
-        return p.at[:, slot].set(r[:, 0].astype(p.dtype))
+    def row_leaf(path):
+        leaf = row
+        for k in path:
+            leaf = leaf[k.key]
+        return leaf
 
-    return jax.tree_util.tree_map_with_path(one, pool, row)
+    def one(path, p):
+        if _is_kv_path(path):
+            key = getattr(path[-1], "key", None)
+            n, _, bs = p.shape[:3]
+            if key in ("k_scale", "v_scale"):
+                base = row_leaf(path[:-1])[key[0]]    # the fp "k"/"v" row
+                _, s = quantize_kv(base[:, 0])        # (n, nb*bs, KH)
+                return p.at[:, block_ids].set(
+                    s.reshape(n, nb, bs, *s.shape[2:]).astype(p.dtype))
+            r = row_leaf(path)[:, 0]
+            if p.dtype == jnp.int8:
+                r, _ = quantize_kv(r)
+            return p.at[:, block_ids].set(
+                r.reshape(n, nb, bs, *p.shape[3:]).astype(p.dtype))
+        return p.at[:, slot].set(row_leaf(path)[:, 0].astype(p.dtype))
+
+    return jax.tree_util.tree_map_with_path(one, pool)
 
 
 def copy_block(pool: dict, src, dst) -> dict:
@@ -217,6 +238,11 @@ class ServeEngine:
         has_attn = any(spec.mixer == "attn" for spec in arch.pattern)
         self.block_size = int(config.kv_block_size or 0) if has_attn else 0
         self.paged = self.block_size > 0
+        # int8 block quantization rides the paged pool only; like
+        # prefix_cache the knob is silently inert where it cannot apply
+        # (attention-free archs, dense caches).
+        kvq = config.kv_quant or "none"
+        self.kv_quant = kvq if (self.paged and kvq != "none") else None
         if config.prefill_chunk_tokens is None:
             self.chunk = 2 * self.block_size if self.paged else 256
         else:
@@ -247,7 +273,8 @@ class ServeEngine:
             self._alloc = BlockAllocator(usable + 1, self.block_size,
                                          self.max_batch, pages)
             self.cache = self._mod.init_paged_cache(
-                arch, usable + 1, self.block_size, self.max_batch, dtype)
+                arch, usable + 1, self.block_size, self.max_batch, dtype,
+                kv_quant=self.kv_quant)
             self.scheduler = SlotScheduler(
                 self.max_batch, policy, block_size=self.block_size,
                 total_blocks=usable, max_len=self.max_len,

@@ -149,6 +149,65 @@ def test_workflow_bench_job_searches_staged_train_plan():
     assert "--train-microbatches" in gated["run"]
 
 
+def test_workflow_has_manual_dispatch_trigger():
+    """Re-seeding a perf baseline (or re-checking a flaky runner) must
+    not require pushing an empty commit."""
+    trig = _triggers(_load())
+    assert "workflow_dispatch" in trig
+
+
+def test_workflow_uploads_artifacts_even_when_the_gate_fails():
+    """A failed perf gate is exactly when the report JSONs are needed —
+    the upload step must run on failure too."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    uploads = [s for s in job["steps"]
+               if str(s.get("uses", "")).startswith("actions/upload-artifact")]
+    assert uploads and uploads[0].get("if") == "always()"
+
+
+def test_workflow_lint_ruff_pin_matches_pyproject_dev_extras():
+    """CI and `pip install -e .[dev]` must lint with the same ruff —
+    an unpinned CI ruff goes red on upstream releases, a drifted local
+    pin argues with CI."""
+    import re
+    lint_run = _all_run_lines(_load()["jobs"]["lint"])
+    ci_pin = re.search(r"ruff==([\w.]+)", lint_run)
+    assert ci_pin, "lint job must pin ruff (ruff==X.Y.Z)"
+    py = (ROOT / "pyproject.toml").read_text()
+    pyproject_pin = re.search(r'"ruff==([\w.]+)"', py)
+    assert pyproject_pin, "pyproject dev extras must pin ruff"
+    assert ci_pin.group(1) == pyproject_pin.group(1)
+
+
+def test_workflow_bench_job_runs_and_gates_the_int8_quant_pass():
+    """The int8-quantized KV pool must stay visible to CI: a third
+    serving pass runs the smoke trace with --kv-quant int8 into its own
+    report, a second compare_bench invocation gates that report against
+    its own baseline, and the refresh step rolls both baselines."""
+    wf = _load()
+    job = wf["jobs"]["bench-smoke"]
+    int8_steps = [s for s in job["steps"]
+                  if "--kv-quant int8" in s.get("run", "")]
+    assert int8_steps, "no int8 serving-bench step"
+    irun = int8_steps[0]["run"]
+    assert "--smoke" in irun
+    assert "--out BENCH_serving_int8.json" in irun
+    gates = [s for s in job["steps"]
+             if "benchmarks.compare_bench" in s.get("run", "")]
+    int8_gates = [s for s in gates
+                  if "bench-baseline/BENCH_serving_int8.json" in s["run"]
+                  and "--current BENCH_serving_int8.json" in s["run"]]
+    assert int8_gates, "no int8 gate invocation"
+    refresh = next(s for s in job["steps"]
+                   if "refresh" in s.get("name", "").lower())
+    assert "BENCH_serving_int8.json" in refresh["run"]
+    # the int8 pass and its gate run before the baseline refresh
+    steps = job["steps"]
+    assert steps.index(int8_steps[0]) < steps.index(refresh)
+    assert steps.index(int8_gates[0]) < steps.index(refresh)
+
+
 def test_workflow_bench_job_measures_and_feeds_a_device_profile():
     """The bench-smoke job must measure a DeviceProfile on the runner
     (launch.profile --smoke under forced virtual devices, so the
@@ -219,16 +278,21 @@ def test_compare_bench_gate_logic():
             "stage_count": 2,
             "pipeline_bubble_frac": 0.111,
             "cost_model_rel_error": 0.40,
+            "quant_kv_reserved_frac": 0.3125,
+            "quant_logit_agreement": 0.012,
             "modes": {"continuous": {"kv_bytes_reserved": 1000,
                                      "itl_p99_ms": 40.0}}}
 
     def cur(speedup=1.34, frac=0.33, kv=1000, itl=40.0, ratio=0.55,
-            hit=0.71, saved=6144, stages=2, bubble=0.111, cmerr=0.40):
+            hit=0.71, saved=6144, stages=2, bubble=0.111, cmerr=0.40,
+            qfrac=0.3125, qlogit=0.012):
         return {"continuous_speedup": speedup, "kv_reserved_frac": frac,
                 "chunked_itl_p99_ratio": ratio,
                 "prefix_hit_rate": hit, "prefill_tokens_saved": saved,
                 "stage_count": stages, "pipeline_bubble_frac": bubble,
                 "cost_model_rel_error": cmerr,
+                "quant_kv_reserved_frac": qfrac,
+                "quant_logit_agreement": qlogit,
                 "modes": {"continuous": {"kv_bytes_reserved": kv,
                                          "itl_p99_ms": itl}}}
 
